@@ -1,0 +1,54 @@
+"""Shared benchmark machinery: run agents, collect (actor_steps, return)
+curves, emit CSV rows ``name,value,derived``."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+def run_single_process(env_factory, builder, episodes: int,
+                       seed: int = 0) -> Dict[str, List[float]]:
+    """Returns {actor_steps: [...], returns: [...], walltime: [...]}."""
+    from repro.agents.builders import make_agent
+    from repro.core import EnvironmentLoop
+
+    env = env_factory(seed)
+    agent = make_agent(builder, seed=seed)
+    loop = EnvironmentLoop(env, agent)
+    steps, rets, wall = [], [], []
+    total_steps = 0
+    t0 = time.time()
+    for _ in range(episodes):
+        r = loop.run_episode()
+        total_steps += r["episode_length"]
+        steps.append(total_steps)
+        rets.append(r["episode_return"])
+        wall.append(time.time() - t0)
+    return {"actor_steps": steps, "returns": rets, "walltime": wall,
+            "learner_steps": int(agent.learner.state.steps)
+            if hasattr(agent.learner.state, "steps") else 0}
+
+
+def smooth(xs, k=20):
+    xs = np.asarray(xs, np.float64)
+    if len(xs) < k:
+        return xs
+    return np.convolve(xs, np.ones(k) / k, mode="valid")
+
+
+def csv_row(name: str, value, derived: str = ""):
+    print(f"{name},{value},{derived}")
+
+
+def curve_summary(name: str, result: Dict, head: int = 30, tail: int = 30):
+    rets = result["returns"]
+    head_m = float(np.mean(rets[:head]))
+    tail_m = float(np.mean(rets[-tail:]))
+    csv_row(f"{name}/first{head}_return", round(head_m, 3))
+    csv_row(f"{name}/last{tail}_return", round(tail_m, 3))
+    csv_row(f"{name}/improvement", round(tail_m - head_m, 3),
+            "positive=learning")
+    csv_row(f"{name}/actor_steps", result["actor_steps"][-1])
+    return tail_m

@@ -1,0 +1,138 @@
+"""Fig 10: bsuite-style capability probes.
+
+Radar axes (scaled to our CPU budget): basic (Catch), memory (MemoryChain),
+exploration (DeepSea), credit assignment (Bandit).  The paper's headline:
+only the recurrent agent (R2D2) scores on memory; MCTS (perfect simulator)
+dominates planning-friendly tasks."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, run_single_process
+from repro.core import EnvironmentLoop, make_environment_spec
+from repro.envs import Bandit, Catch, DeepSea, MemoryChain
+
+
+def _score(returns, lo, hi):
+    m = float(np.mean(returns))
+    return max(0.0, min(1.0, (m - lo) / (hi - lo)))
+
+
+def probe_basic(agent_name, episodes=200):
+    spec = make_environment_spec(Catch(seed=0))
+    if agent_name == "dqn":
+        from repro.agents.dqn import DQNBuilder, DQNConfig
+        b = DQNBuilder(spec, DQNConfig(min_replay_size=50,
+                                       samples_per_insert=0, batch_size=32,
+                                       n_step=1, epsilon=0.2), seed=1)
+    elif agent_name == "r2d2":
+        from repro.agents.r2d2 import R2D2Builder, R2D2Config
+        b = R2D2Builder(spec, R2D2Config(sequence_length=9, period=9,
+                                         burn_in=0, batch_size=16,
+                                         min_replay_size=60,
+                                         samples_per_insert=0, epsilon=0.2),
+                        seed=1)
+    else:
+        from repro.agents.impala import IMPALABuilder, IMPALAConfig
+        b = IMPALABuilder(spec, IMPALAConfig(sequence_length=5, batch_size=4,
+                                             learning_rate=3e-3), seed=1)
+        episodes = episodes * 3
+    r = run_single_process(lambda s: Catch(seed=s), b, episodes, seed=1)
+    return _score(r["returns"][-40:], -1, 1)
+
+
+def probe_memory(agent_name, episodes=300):
+    env_factory = lambda s: MemoryChain(memory_length=5, seed=s)
+    spec = make_environment_spec(env_factory(0))
+    if agent_name == "r2d2":
+        from repro.agents.r2d2 import R2D2Builder, R2D2Config
+        b = R2D2Builder(spec, R2D2Config(sequence_length=6, period=3,
+                                         burn_in=0, batch_size=16,
+                                         min_replay_size=60,
+                                         samples_per_insert=0,
+                                         target_update_period=40,
+                                         epsilon=0.15), seed=2)
+    elif agent_name == "dqn":
+        from repro.agents.dqn import DQNBuilder, DQNConfig
+        b = DQNBuilder(spec, DQNConfig(min_replay_size=50,
+                                       samples_per_insert=0, batch_size=32,
+                                       n_step=1, epsilon=0.15), seed=2)
+    else:
+        return None
+    r = run_single_process(env_factory, b, episodes, seed=2)
+    return _score(r["returns"][-50:], -1, 1)
+
+
+def probe_exploration(agent_name, episodes=250):
+    env_factory = lambda s: DeepSea(size=6, seed=1)
+    spec = make_environment_spec(env_factory(0))
+    if agent_name == "dqfd":
+        from repro.agents.dqfd import (DQfDBuilder, DQfDConfig,
+                                       generate_deep_sea_demos)
+        demos = generate_deep_sea_demos(DeepSea(size=6, seed=1), 20)
+        b = DQfDBuilder(spec, demos, DQfDConfig(min_replay_size=60,
+                                                samples_per_insert=0,
+                                                batch_size=32, n_step=1,
+                                                demo_ratio=0.5), seed=3)
+    else:
+        from repro.agents.dqn import DQNBuilder, DQNConfig
+        b = DQNBuilder(spec, DQNConfig(min_replay_size=60,
+                                       samples_per_insert=0, batch_size=32,
+                                       n_step=1, epsilon=0.1), seed=3)
+    r = run_single_process(env_factory, b, episodes, seed=3)
+    return _score(r["returns"][-50:], -0.05, 0.99)
+
+
+def probe_credit(agent_name, episodes=400):
+    env_factory = lambda s: Bandit(seed=4)
+    spec = make_environment_spec(env_factory(0))
+    from repro.agents.dqn import DQNBuilder, DQNConfig
+    b = DQNBuilder(spec, DQNConfig(min_replay_size=30, samples_per_insert=0,
+                                   batch_size=16, n_step=1, epsilon=0.1),
+                   seed=4)
+    r = run_single_process(env_factory, b, episodes, seed=4)
+    return _score(r["returns"][-100:], 0.0, 1.0)
+
+
+def probe_planning_mcts(episodes=15):
+    import jax
+    from repro.agents.mcts import MCTSActor, MCTSConfig, make_network
+    from repro.core import VariableClient
+    from repro.core.variable import VariableServer
+    env = Catch(seed=4)
+    spec = make_environment_spec(env)
+    cfg = MCTSConfig(num_simulations=48, search_depth=12, temperature=0.25)
+    init, _, _, _ = make_network(spec, cfg)
+    server = VariableServer(policy=init(jax.random.key(0)))
+    actor = MCTSActor(spec, cfg, VariableClient(server), model_env=env)
+    rets = []
+    for _ in range(episodes):
+        ts = env.reset()
+        total = 0.0
+        while not ts.last():
+            ts = env.step(actor.select_action(ts.observation))
+            total += ts.reward
+        rets.append(total)
+    return _score(rets, -1, 1)
+
+
+def main(fast: bool = False):
+    k = 0.5 if fast else 1.0
+    scores = {}
+    scores[("dqn", "basic")] = probe_basic("dqn", int(200 * k))
+    scores[("r2d2", "basic")] = probe_basic("r2d2", int(200 * k))
+    scores[("dqn", "memory")] = probe_memory("dqn", int(300 * k))
+    scores[("r2d2", "memory")] = probe_memory("r2d2", int(300 * k))
+    scores[("dqn", "exploration")] = probe_exploration("dqn", int(250 * k))
+    scores[("dqfd", "exploration")] = probe_exploration("dqfd", int(250 * k))
+    scores[("dqn", "credit")] = probe_credit("dqn", int(400 * k))
+    scores[("mcts", "planning")] = probe_planning_mcts(10)
+    for (agent, axis), s in scores.items():
+        csv_row(f"fig10/{agent}/{axis}", round(s, 3), "0..1 radar score")
+    csv_row("fig10/memory_needs_recurrence",
+            int(scores[("r2d2", "memory")] > scores[("dqn", "memory")] + 0.1))
+    return scores
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Fig 12/13: offline RL — BC and value-based learners on fixed datasets.
+
+Claim: given data from a converged ("data generation") policy, offline
+learners approach that policy's performance without any environment
+interaction during training; value-based offline learners (here offline DQN
+with double-Q, per Fig 13) match BC or better on the same data."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import EnvironmentLoop, FeedForwardActor, VariableClient, make_environment_spec
+from repro.envs import Catch
+from repro.replay import dataset_from_list
+
+
+def _generation_policy(board):
+    ball = int(np.argmax(board[:-1].max(axis=0)))
+    paddle = int(np.argmax(board[-1]))
+    return int(1 + np.sign(ball - paddle))
+
+
+def _collect_dataset(num_episodes=150, quality=0.9, seed=0):
+    """Mixture of expert + random actions (includes low-quality data, as the
+    paper's datasets do)."""
+    from repro.adders import NStepTransitionAdder
+    from repro.replay import MinSize, Table, Uniform
+    env = Catch(seed=seed)
+    rng = np.random.RandomState(seed)
+    table = Table("data", 1_000_000, Uniform(0), MinSize(1))
+    adder = NStepTransitionAdder(table, 1, 0.99)
+    gen_returns = []
+    for _ in range(num_episodes):
+        ts = env.reset()
+        adder.add_first(ts)
+        total = 0.0
+        while not ts.last():
+            if rng.rand() < quality:
+                a = _generation_policy(ts.observation)
+            else:
+                a = int(rng.randint(3))
+            ts = env.step(a)
+            adder.add(a, ts)
+            total += ts.reward
+        gen_returns.append(total)
+    items = [table._items[k].data for k in table._order]
+    return items, float(np.mean(gen_returns))
+
+
+def _evaluate(learner, policy, episodes=25, seed=123):
+    actor = FeedForwardActor(policy, VariableClient(learner))
+    loop = EnvironmentLoop(Catch(seed=seed), actor)
+    return float(np.mean([loop.run_episode()["episode_return"]
+                          for _ in range(episodes)]))
+
+
+def main(learner_steps: int = 400):
+    import jax
+    spec = make_environment_spec(Catch(seed=0))
+    items, gen_return = _collect_dataset()
+    csv_row("fig12/data_generation_return", round(gen_return, 3),
+            "dashed line in Fig 12/13")
+
+    # BC
+    from repro.agents import bc as bc_lib
+    cfg = bc_lib.BCConfig()
+    learner = bc_lib.make_learner(spec, cfg,
+                                  dataset_from_list(items, 64), jax.random.key(0))
+    for _ in range(learner_steps):
+        learner.step()
+    bc_return = _evaluate(learner, bc_lib.make_eval_policy(spec, cfg))
+    csv_row("fig12/bc_return", round(bc_return, 3))
+
+    # offline DQN (double-Q + Adam, Fig 13 recipe)
+    from repro.agents import dqn as dqn_lib
+    qcfg = dqn_lib.DQNConfig(prioritized=False)
+    qlearner = dqn_lib.make_learner(spec, qcfg,
+                                    dataset_from_list(items, 64),
+                                    jax.random.key(1))
+    for _ in range(learner_steps):
+        qlearner.step()
+    dqn_return = _evaluate(qlearner, dqn_lib.make_eval_policy(spec, qcfg))
+    csv_row("fig13/offline_dqn_return", round(dqn_return, 3))
+
+    csv_row("fig12/offline_matches_generator",
+            int(bc_return > gen_return - 0.35 or dqn_return > gen_return - 0.35),
+            "offline learner approaches the data-generation policy")
+    return gen_return, bc_return, dqn_return
+
+
+if __name__ == "__main__":
+    main()

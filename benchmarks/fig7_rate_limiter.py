@@ -1,0 +1,53 @@
+"""Fig 7/18: rate-limiter (samples-per-insert) sensitivity.
+
+Paper claim: low SPI is wasteful (more env interactions to the same return);
+over-high SPI destabilizes.  We sweep SPI on synchronous DQN/Catch where the
+SPI maps to learner-steps-per-observation, and report sample efficiency
+(episodes to reach a return threshold) per SPI."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, run_single_process, smooth
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import make_environment_spec
+from repro.envs import Catch
+
+SPIS = (0.5, 4.0, 32.0)
+EPISODES = 250
+THRESHOLD = 0.3
+
+
+def episodes_to_threshold(returns, threshold=THRESHOLD, k=25):
+    sm = smooth(returns, k)
+    hits = np.where(sm >= threshold)[0]
+    return int(hits[0]) + k if len(hits) else -1
+
+
+def main(episodes: int = EPISODES):
+    spec = make_environment_spec(Catch(seed=0))
+    results = {}
+    for spi in SPIS:
+        # synchronous proxy: batch_size/spi observations per learner step
+        cfg = DQNConfig(min_replay_size=100, samples_per_insert=spi,
+                        batch_size=32, n_step=1, epsilon=0.15)
+        builder = DQNBuilder(spec, cfg, seed=4)
+        result = run_single_process(lambda s: Catch(seed=s), builder,
+                                    episodes, seed=4)
+        e2t = episodes_to_threshold(result["returns"])
+        final = float(np.mean(result["returns"][-30:]))
+        results[spi] = (e2t, final)
+        csv_row(f"fig7/spi{spi}/episodes_to_{THRESHOLD}", e2t,
+                "-1 = never reached")
+        csv_row(f"fig7/spi{spi}/final_return", round(final, 3))
+        csv_row(f"fig7/spi{spi}/learner_steps", result["learner_steps"])
+    # claim: higher SPI reaches threshold in fewer (or equal) episodes
+    lo, hi = results[SPIS[0]], results[SPIS[-1]]
+    ok = (lo[0] == -1 and hi[0] != -1) or (hi[0] != -1 and hi[0] <= lo[0])
+    csv_row("fig7/low_spi_is_wasteful", int(ok),
+            f"spi{SPIS[0]} e2t={lo[0]} vs spi{SPIS[-1]} e2t={hi[0]}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

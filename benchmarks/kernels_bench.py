@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing plus the
+XLA-path equivalents (the numbers that matter on CPU are the ref paths; the
+Pallas paths are TPU-target and here only verified + timed for regression
+tracking)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    rng = np.random.RandomState(0)
+    # flash attention ref (XLA path used by the model zoo)
+    q = jnp.asarray(rng.randn(1, 4, 512, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 4, 512, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 4, 512, 64), jnp.float32)
+    us = _time(jax.jit(lambda *a: ref.flash_attention_ref(*a)), q, k, v)
+    csv_row("kernels/flash_ref_xla_512", round(us, 1), "us_per_call")
+
+    qd = jnp.asarray(rng.randn(2, 8, 64), jnp.float32)
+    kd = jnp.asarray(rng.randn(2, 2048, 8, 64), jnp.float32)
+    vd = jnp.asarray(rng.randn(2, 2048, 8, 64), jnp.float32)
+    lens = jnp.asarray([2048, 1024], jnp.int32)
+    us = _time(jax.jit(lambda *a: ref.decode_attention_ref(*a)), qd, kd, vd, lens)
+    csv_row("kernels/decode_ref_xla_2k", round(us, 1), "us_per_call")
+
+    x = jnp.asarray(rng.randn(1, 1024, 4, 64), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(1, 1024, 4)) * 0.1 + 0.01, jnp.float32)
+    A = -jnp.asarray(np.abs(rng.randn(4)) + 0.5, jnp.float32)
+    B = jnp.asarray(rng.randn(1, 1024, 64), jnp.float32)
+    C = jnp.asarray(rng.randn(1, 1024, 64), jnp.float32)
+    us = _time(jax.jit(lambda *a: ref.ssd_scan_ref(*a, 256)[0]), x, dt, A, B, C)
+    csv_row("kernels/ssd_ref_xla_1k", round(us, 1), "us_per_call")
+
+    T, Bt = 128, 256
+    args = [jnp.asarray(rng.randn(T, Bt), jnp.float32) for _ in range(2)] + \
+        [jnp.asarray(rng.randn(T, Bt), jnp.float32),
+         jnp.asarray(rng.rand(T, Bt) * 0.99, jnp.float32),
+         jnp.asarray(np.abs(rng.randn(T, Bt)), jnp.float32)]
+    us = _time(jax.jit(lambda *a: ref.vtrace_ref(*a)[0]), *args)
+    csv_row("kernels/vtrace_ref_xla_128x256", round(us, 1), "us_per_call")
+
+    # interpret-mode allclose spot checks (slow; tiny shapes)
+    out = ops.flash_attention(q[:, :1, :128], k[:, :1, :128], v[:, :1, :128],
+                              interpret=True)
+    exp = ref.flash_attention_ref(q[:, :1, :128], k[:, :1, :128], v[:, :1, :128])
+    csv_row("kernels/flash_pallas_allclose",
+            int(float(jnp.max(jnp.abs(out - exp))) < 1e-4))
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run sweep (results/dryrun_baseline.jsonl).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the fits-HBM bit.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_baseline.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))] = r
+    return recs
+
+
+def main(path=DEFAULT_PATH, mesh="single"):
+    recs = load(path)
+    if not recs:
+        csv_row("roofline/missing", 1,
+                "run: python -m repro.launch.dryrun --all --mesh both")
+        return {}
+    n_ok = n_fit = 0
+    for (arch, shape, m, tag), r in sorted(recs.items()):
+        if m != mesh or tag != "baseline":
+            continue
+        if r["status"] == "skipped":
+            csv_row(f"roofline/{arch}/{shape}", "skipped", r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            csv_row(f"roofline/{arch}/{shape}", "ERROR", r.get("error", "")[:60])
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        fits = r["memory"].get("fits_hbm")
+        n_fit += bool(fits)
+        csv_row(
+            f"roofline/{arch}/{shape}",
+            rf["dominant"],
+            f"c={rf['compute_s']:.4f}s m={rf['memory_s']:.4f}s "
+            f"n={rf['collective_s']:.4f}s useful={rf['useful_flops_ratio']:.2f} "
+            f"fits={fits}")
+    csv_row("roofline/num_ok", n_ok)
+    csv_row("roofline/num_fits_hbm", n_fit)
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: the Acme pattern in 30 lines — build a DQN agent, run the
+environment loop, watch it learn Catch.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.agents.builders import make_agent
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import EnvironmentLoop, make_environment_spec
+from repro.envs import Catch
+
+
+def main():
+    environment = Catch(seed=1)
+    spec = make_environment_spec(environment)
+
+    config = DQNConfig(min_replay_size=50, samples_per_insert=0.0,
+                       batch_size=32, n_step=1, epsilon=0.2)
+    agent = make_agent(DQNBuilder(spec, config, seed=0))
+
+    loop = EnvironmentLoop(environment, agent)
+    returns = []
+    for episode in range(250):
+        result = loop.run_episode()
+        returns.append(result["episode_return"])
+        if (episode + 1) % 50 == 0:
+            print(f"episode {episode + 1:4d}  "
+                  f"avg_return(last50) {np.mean(returns[-50:]):+.2f}")
+    assert np.mean(returns[-50:]) > 0, "agent should have learned catch"
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.adders.base import Adder  # noqa: F401
+from repro.adders.sequence import EpisodeAdder, SequenceAdder  # noqa: F401
+from repro.adders.transition import NStepTransitionAdder, TransitionAdder  # noqa: F401

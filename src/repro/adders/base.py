@@ -1,0 +1,20 @@
+"""Adders (§2.3): the insertion-side pre-processing between actor and table."""
+from __future__ import annotations
+
+import abc
+from typing import Any, Optional
+
+from repro.core.types import TimeStep
+
+
+class Adder(abc.ABC):
+    @abc.abstractmethod
+    def add_first(self, timestep: TimeStep):
+        ...
+
+    @abc.abstractmethod
+    def add(self, action, next_timestep: TimeStep, extras: Any = ()):
+        ...
+
+    def reset(self):
+        pass

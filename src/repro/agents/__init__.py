@@ -1,0 +1,3 @@
+"""Acme baseline agents (§3): value-based, actor-critic, planning, offline."""
+from repro.agents import bc, builders, common, continuous, dqfd, dqn, impala, mcts, r2d2  # noqa: F401
+from repro.agents.builders import make_agent, make_distributed_agent  # noqa: F401

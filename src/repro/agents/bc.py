@@ -1,0 +1,79 @@
+"""Behaviour Cloning (§3.7): the offline baseline — supervised learning of
+the action mapping from a fixed dataset of transitions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.agents.common import JaxLearner, LearnerState
+from repro.core.types import EnvironmentSpec
+from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass
+class BCConfig:
+    hidden: int = 64
+    learning_rate: float = 1e-3
+    batch_size: int = 64
+    continuous: bool = False
+
+
+def make_network(spec: EnvironmentSpec, cfg: BCConfig):
+    obs_dim = int(np.prod(spec.observations.shape)) or 1
+    if cfg.continuous:
+        out = int(np.prod(spec.actions.shape)) or 1
+    else:
+        out = spec.actions.num_values
+
+    def init(key):
+        return mlp_init(key, (obs_dim, cfg.hidden, cfg.hidden, out))
+
+    def apply(params, obs):
+        return mlp_apply(params, obs)
+
+    return init, apply, obs_dim, out
+
+
+def make_learner(spec: EnvironmentSpec, cfg: BCConfig, iterator: Iterator,
+                 rng_key) -> JaxLearner:
+    init, apply, obs_dim, out = make_network(spec, cfg)
+    opt = optim.adam(cfg.learning_rate)
+    params = init(rng_key)
+    state = LearnerState(params, (), opt.init(params), jnp.zeros((), jnp.int32))
+
+    def loss_fn(params, t):
+        obs = flatten_obs(t.observation, spec.observations.shape)
+        pred = apply(params, obs)
+        if cfg.continuous:
+            a = t.action.reshape(obs.shape[0], -1).astype(jnp.float32)
+            return jnp.mean(jnp.square(jnp.tanh(pred) - a))
+        logp = jax.nn.log_softmax(pred)
+        a = t.action.astype(jnp.int32)
+        return -jnp.mean(jnp.take_along_axis(logp, a[:, None], -1))
+
+    def update(state: LearnerState, sample):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, sample.data)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = optim.apply_updates(state.params, updates)
+        return (LearnerState(params, (), opt_state, state.steps + 1),
+                {"loss": loss}, None)
+
+    return JaxLearner(state, update, iterator)
+
+
+def make_eval_policy(spec: EnvironmentSpec, cfg: BCConfig):
+    _, apply, _, _ = make_network(spec, cfg)
+
+    def policy(params, key, obs):
+        obs = flatten_obs(obs, spec.observations.shape)
+        out = apply(params, obs)[0]
+        if cfg.continuous:
+            return jnp.tanh(out)
+        return jnp.argmax(out).astype(jnp.int32)
+
+    return policy

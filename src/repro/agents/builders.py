@@ -1,0 +1,172 @@
+"""Agent assembly: the same builder yields the single-process agent (§2.2)
+and the distributed program (§2.4) — Acme's central design claim.
+
+A *builder* bundles the factories:
+  make_replay()            -> (table, rate_limiter)
+  make_adder(table)        -> adder
+  make_dataset(table)      -> learner batch iterator
+  make_learner(it, cb)     -> JaxLearner
+  make_policy(evaluation)  -> policy fn for FeedForward/Recurrent actors
+  make_actor(policy, client, adder) -> Actor
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Optional
+
+from repro.core import Agent, Counter, EnvironmentLoop, FeedForwardActor, VariableClient
+from repro.distributed.program import LocalLauncher, Program
+
+
+def make_agent(builder, seed: int = 0) -> Agent:
+    """Synchronous single-process agent: actor and learner in lockstep."""
+    table = builder.make_replay()
+    adder = builder.make_adder(table)
+    iterator = builder.make_dataset(table)
+    learner = builder.make_learner(
+        iterator, priority_update_cb=table.update_priorities)
+    client = VariableClient(learner, update_period=builder.variable_update_period)
+    actor = builder.make_actor(builder.make_policy(evaluation=False),
+                               client, adder, seed)
+    batch = getattr(getattr(builder, "cfg", None), "batch_size", 1)
+    consuming = getattr(table.selector, "consumes", False)
+
+    def can_step():
+        if table.rate_limiter.would_block_sample():
+            return False
+        return table.size() >= batch if consuming else True
+
+    return Agent(actor, learner,
+                 min_observations=builder.min_observations,
+                 observations_per_step=builder.observations_per_step,
+                 can_step=can_step)
+
+
+class _LearnerWorker:
+    """Learner node: run learner steps until stopped (rate limiter blocks us
+    when we get ahead of the actors — §2.5)."""
+
+    def __init__(self, learner, max_steps: Optional[int] = None):
+        self.learner = learner
+        self.max_steps = max_steps
+        self._stop = threading.Event()
+
+    def run(self):
+        for i in itertools.count():
+            if self._stop.is_set():
+                return
+            if self.max_steps is not None and i >= self.max_steps:
+                return
+            try:
+                self.learner.step()
+            except Exception:
+                if self._stop.is_set():
+                    return
+                raise
+
+    def stop(self):
+        self._stop.set()
+
+    def get_variables(self, names=()):
+        return self.learner.get_variables(names)
+
+
+class _ActorWorker:
+    """Actor node: its own environment instance + loop (Fig 4)."""
+
+    def __init__(self, env_factory, builder, variable_source, counter,
+                 table, seed: int, max_episodes: Optional[int] = None):
+        self.env = env_factory(seed)
+        client = VariableClient(variable_source,
+                                update_period=builder.variable_update_period)
+        adder = builder.make_adder(table)
+        actor = builder.make_actor(builder.make_policy(evaluation=False),
+                                   client, adder, seed)
+        self.loop = EnvironmentLoop(self.env, actor, counter=counter,
+                                    label="actor")
+        self.max_episodes = max_episodes
+        self._stop = threading.Event()
+
+    def run(self):
+        self.loop.run(num_episodes=self.max_episodes,
+                      should_stop=self._stop.is_set)
+
+    def stop(self):
+        self._stop.set()
+
+
+class DistributedAgent:
+    """Handle onto a launched distributed program."""
+
+    def __init__(self, program, launcher, learner, table, counter):
+        self.program = program
+        self.launcher = launcher
+        self.learner = learner
+        self.table = table
+        self.counter = counter
+
+    def stop(self):
+        self.table.stop()
+        self.launcher.stop()
+        self.launcher.join(timeout=10)
+
+
+class _EvaluatorWorker:
+    """Background evaluator (§4.2): an actor with NO adder that periodically
+    pulls weights and logs episode returns against learner steps."""
+
+    def __init__(self, env_factory, builder, variable_source, counter,
+                 seed: int, period_s: float = 1.0):
+        self.env = env_factory(seed)
+        client = VariableClient(variable_source, update_period=1)
+        actor = builder.make_actor(builder.make_policy(evaluation=True),
+                                   client, adder=None, seed=seed)
+        self.loop = EnvironmentLoop(self.env, actor, counter=counter,
+                                    label="evaluator", should_update=True)
+        self.period_s = period_s
+        self.returns = []
+        self._stop = threading.Event()
+
+    def run(self):
+        while not self._stop.is_set():
+            result = self.loop.run_episode()
+            self.returns.append(result["episode_return"])
+            self._stop.wait(self.period_s)
+
+    def stop(self):
+        self._stop.set()
+
+
+def make_distributed_agent(builder, env_factory, num_actors: int,
+                           seed: int = 0,
+                           max_learner_steps: Optional[int] = None,
+                           with_evaluator: bool = False) -> DistributedAgent:
+    """Replicated actors + one learner + replay (+ background evaluator),
+    on a Launchpad-lite graph — Fig 4 of the paper."""
+    program = Program("distributed_agent")
+    counter = Counter()
+
+    table = builder.make_replay()
+    iterator = builder.make_dataset(table)
+    learner = builder.make_learner(
+        iterator, priority_update_cb=table.update_priorities)
+    worker = _LearnerWorker(learner, max_steps=max_learner_steps)
+
+    program.add_node("replay", lambda: table)
+    learner_handle = program.add_node("learner", lambda: worker,
+                                      is_worker=True)
+    for i in range(num_actors):
+        program.add_node(
+            f"actor_{i}", _ActorWorker, env_factory, builder, learner_handle,
+            counter, table, seed + 1000 * (i + 1), is_worker=True)
+    if with_evaluator:
+        program.add_node("evaluator", _EvaluatorWorker, env_factory, builder,
+                         learner_handle, counter, seed + 999_999,
+                         is_worker=True)
+
+    launcher = LocalLauncher(program).launch()
+    agent = DistributedAgent(program, launcher, learner, table, counter)
+    if with_evaluator:
+        agent.evaluator = program.resolve("evaluator")
+    return agent

@@ -1,0 +1,235 @@
+"""MCTS agent (§3.5): AlphaZero-lite — planning with a (perfect) simulator,
+search guided by policy/value networks, UCT selection (Eq. 19), policy
+trained by KL to the visit-count distribution (Eq. 20), value by TD.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.agents.common import JaxLearner, LearnerState
+from repro.core.types import EnvironmentSpec
+from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
+from repro.replay.dataset import ReplaySample
+
+
+@dataclasses.dataclass
+class MCTSConfig:
+    hidden: int = 64
+    learning_rate: float = 1e-3
+    discount: float = 0.99
+    num_simulations: int = 32
+    uct_c: float = 1.25
+    search_depth: int = 16
+    batch_size: int = 32
+    min_replay_size: int = 100
+    max_replay_size: int = 50_000
+    temperature: float = 1.0
+
+
+def make_network(spec: EnvironmentSpec, cfg: MCTSConfig):
+    num_actions = spec.actions.num_values
+    in_dim = int(np.prod(spec.observations.shape)) or 1
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "torso": mlp_init(k1, (in_dim, cfg.hidden, cfg.hidden)),
+            "policy": mlp_init(k2, (cfg.hidden, num_actions)),
+            "value": mlp_init(k3, (cfg.hidden, 1)),
+        }
+
+    def apply(params, obs):
+        h = mlp_apply(params["torso"], obs, activate_final=True)
+        return mlp_apply(params["policy"], h), mlp_apply(params["value"], h)[..., 0]
+
+    return init, apply, in_dim, num_actions
+
+
+class _Node:
+    __slots__ = ("prior", "value_sum", "visits", "children", "reward",
+                 "terminal")
+
+    def __init__(self, prior: float):
+        self.prior = prior
+        self.value_sum = 0.0
+        self.visits = 0
+        self.children = {}
+        self.reward = 0.0
+        self.terminal = False
+
+    @property
+    def value(self):
+        return self.value_sum / self.visits if self.visits else 0.0
+
+
+class MCTSActor:
+    """Actor that plans with a copyable simulator (env must support
+    deepcopy — all our envs do)."""
+
+    def __init__(self, spec, cfg: MCTSConfig, variable_client, adder=None,
+                 model_env=None, seed: int = 0):
+        self.spec = spec
+        self.cfg = cfg
+        self._client = variable_client
+        self._adder = adder
+        _, apply, _, self.num_actions = make_network(spec, cfg)
+        self._apply = jax.jit(apply)
+        self._rng = np.random.RandomState(seed)
+        self._model_env = model_env
+        self._last_probs = None
+
+    def _evaluate(self, obs):
+        logits, value = self._apply(self._client.params,
+                                    flatten_obs(obs, self.spec.observations.shape))
+        return np.asarray(jax.nn.softmax(logits[0])), float(value[0])
+
+    def _search(self, env, root_obs) -> np.ndarray:
+        priors, _ = self._evaluate(root_obs)
+        root = _Node(1.0)
+        for a in range(self.num_actions):
+            root.children[a] = _Node(float(priors[a]))
+
+        for _ in range(self.cfg.num_simulations):
+            sim = copy.deepcopy(env)
+            node = root
+            path = [node]
+            depth = 0
+            value = 0.0
+            # selection + expansion
+            while depth < self.cfg.search_depth:
+                best_a, best_score = None, -1e9
+                sqrt_n = math.sqrt(max(node.visits, 1))
+                for a, child in node.children.items():
+                    u = self.cfg.uct_c * sqrt_n / (child.visits + 1) * child.prior
+                    score = child.value + u
+                    if score > best_score:
+                        best_a, best_score = a, score
+                child = node.children[best_a]
+                ts = sim.step(best_a)
+                child.reward = float(ts.reward or 0.0)
+                depth += 1
+                path.append(child)
+                node = child
+                if ts.last():
+                    child.terminal = True
+                    value = 0.0
+                    break
+                if not child.children:
+                    priors, value = self._evaluate(ts.observation)
+                    for a in range(self.num_actions):
+                        child.children[a] = _Node(float(priors[a]))
+                    break
+            # backup
+            g = value
+            for n in reversed(path[1:]):
+                g = n.reward + self.cfg.discount * g
+                n.value_sum += g
+                n.visits += 1
+            root.visits += 1
+
+        visits = np.array([root.children[a].visits
+                           for a in range(self.num_actions)], np.float64)
+        if visits.sum() == 0:
+            visits += 1
+        probs = visits ** (1.0 / self.cfg.temperature)
+        return probs / probs.sum()
+
+    def select_action(self, observation):
+        env = self._model_env
+        probs = self._search(env, observation)
+        self._last_probs = probs.astype(np.float32)
+        return np.int32(self._rng.choice(self.num_actions, p=probs))
+
+    def observe_first(self, timestep):
+        if self._adder:
+            self._adder.add_first(timestep)
+
+    def observe(self, action, next_timestep):
+        if self._adder:
+            self._adder.add(action, next_timestep,
+                            extras={"search_probs": self._last_probs})
+
+    def update(self, wait=False):
+        self._client.update(wait)
+
+
+def make_learner(spec: EnvironmentSpec, cfg: MCTSConfig, iterator: Iterator,
+                 rng_key) -> JaxLearner:
+    init, apply, in_dim, num_actions = make_network(spec, cfg)
+    opt = optim.adam(cfg.learning_rate)
+    params = init(rng_key)
+    state = LearnerState(params, (), opt.init(params), jnp.zeros((), jnp.int32))
+
+    def loss_fn(params, seq):
+        obs = seq["observation"].astype(jnp.float32)
+        B, T = obs.shape[:2]
+        logits, values = apply(params, obs.reshape(B * T, -1))
+        logits = logits.reshape(B, T, -1)
+        values = values.reshape(B, T)
+        probs = seq["search_probs"].astype(jnp.float32)
+        mask = seq["mask"].astype(jnp.float32)
+        # policy: KL(pi_mcts || pi_theta) (Eq. 20)
+        logp = jax.nn.log_softmax(logits)
+        pi_loss = -jnp.sum(probs * logp, -1)
+        # value: TD(0) to observed returns
+        rewards = seq["reward"].astype(jnp.float32)
+        disc = seq["discount"].astype(jnp.float32) * cfg.discount
+        v_next = jnp.concatenate([values[:, 1:], values[:, -1:]], 1)
+        td = rewards + disc * jax.lax.stop_gradient(v_next) - values
+        v_loss = 0.5 * jnp.square(td)
+        loss = jnp.sum((pi_loss + v_loss) * mask) / jnp.maximum(jnp.sum(mask), 1)
+        return loss, {"loss": loss}
+
+    def update(state: LearnerState, sample: ReplaySample):
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(state.params,
+                                                         sample.data)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = optim.apply_updates(state.params, updates)
+        return (LearnerState(params, (), opt_state, state.steps + 1),
+                metrics, None)
+
+    return JaxLearner(state, update, iterator)
+
+
+class MCTSBuilder:
+    def __init__(self, spec: EnvironmentSpec, model_env_factory,
+                 cfg: MCTSConfig = None, seed: int = 0):
+        self.spec = spec
+        self.cfg = cfg or MCTSConfig()
+        self.seed = seed
+        self.model_env_factory = model_env_factory
+        self.variable_update_period = 5
+        self.min_observations = self.cfg.min_replay_size
+        self.observations_per_step = 4.0
+
+    def make_replay(self):
+        from repro import replay as r
+        return r.Table("replay", self.cfg.max_replay_size, r.Uniform(self.seed),
+                       r.MinSize(self.cfg.min_replay_size))
+
+    def make_adder(self, table):
+        from repro.adders.sequence import SequenceAdder
+        return SequenceAdder(table, 10, period=10)
+
+    def make_dataset(self, table):
+        from repro.replay import as_iterator
+        return as_iterator(table, self.cfg.batch_size)
+
+    def make_learner(self, iterator, priority_update_cb=None):
+        return make_learner(self.spec, self.cfg, iterator,
+                            jax.random.key(self.seed))
+
+    def make_policy(self, evaluation: bool = False):
+        return None   # MCTS plans; no standalone policy fn
+
+    def make_actor(self, policy, variable_client, adder, seed: int = 0):
+        return MCTSActor(self.spec, self.cfg, variable_client, adder,
+                         model_env=self.model_env_factory(seed), seed=seed)

@@ -1,0 +1,54 @@
+"""R2D3 (§3.6): R2D2 + expert demonstrations.
+
+The recurrent learner's batches interleave agent-replay sequences with a
+fixed table of demonstration sequences at a configurable ratio (Gulcehre et
+al., 2020 — 'Making efficient use of demonstrations').
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.agents import r2d2 as r2d2_lib
+from repro.agents.dqfd import mixed_iterator
+from repro.core.types import EnvironmentSpec
+
+
+@dataclasses.dataclass
+class R2D3Config(r2d2_lib.R2D2Config):
+    demo_ratio: float = 0.25
+
+
+class R2D3Builder(r2d2_lib.R2D2Builder):
+    """R2D2 builder whose dataset mixes in demonstration sequences."""
+
+    def __init__(self, spec: EnvironmentSpec, demo_sequences,
+                 cfg: R2D3Config = None, seed: int = 0):
+        super().__init__(spec, cfg or R2D3Config(), seed)
+        self.demos = demo_sequences
+
+    def make_demo_table(self):
+        from repro import replay as r
+        table = r.Table("demo_seqs", max(len(self.demos), 1), r.Prioritized(),
+                        r.MinSize(1))
+        for item in self.demos:
+            table.insert(item, priority=1.0)
+        return table
+
+    def make_dataset(self, table):
+        demo_table = self.make_demo_table()
+        return mixed_iterator(table, demo_table, self.cfg.batch_size,
+                              self.cfg.demo_ratio)
+
+    def make_learner(self, iterator, priority_update_cb=None):
+        import jax
+        inner_cb = priority_update_cb
+
+        def cb(keys, priorities):
+            if inner_cb is None:
+                return
+            m = keys >= 0
+            inner_cb(keys[m], priorities[m])
+
+        return r2d2_lib.make_learner(self.spec, self.cfg, iterator,
+                                     jax.random.key(self.seed),
+                                     priority_update_cb=cb)

@@ -1,0 +1,71 @@
+"""Pytree checkpointing (npz): learner state + counters persist through
+interruptions; learner walltime is checkpointed alongside the networks so
+timekeeping survives preemption (§4.2)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, name: str = "checkpoint",
+                 keep: int = 3):
+        self.directory = directory
+        self.name = name
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"{self.name}_{step}.npz")
+
+    def save(self, state, step: int, metadata: Optional[Dict] = None):
+        arrays, treedef = _flatten(state)
+        meta = dict(metadata or {})
+        meta["step"] = step
+        # atomic write
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        os.close(fd)
+        np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+        src = tmp + ".npz"          # np.savez appends .npz
+        os.replace(src, self._path(step))
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        self._gc()
+
+    def _gc(self):
+        ckpts = self.list_steps()
+        for step in ckpts[:-self.keep]:
+            os.unlink(self._path(step))
+
+    def list_steps(self):
+        steps = []
+        for f in os.listdir(self.directory):
+            if f.startswith(self.name + "_") and f.endswith(".npz"):
+                try:
+                    steps.append(int(f[len(self.name) + 1:-4]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def restore(self, state_template, step: Optional[int] = None):
+        """Returns (state, metadata) or (None, None) if nothing saved."""
+        steps = self.list_steps()
+        if not steps:
+            return None, None
+        step = steps[-1] if step is None else step
+        with np.load(self._path(step), allow_pickle=False) as data:
+            meta = json.loads(str(data["__meta__"]))
+            leaves, treedef = jax.tree_util.tree_flatten(state_template)
+            restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+            state = jax.tree_util.tree_unflatten(treedef, restored)
+        return state, meta

@@ -1,0 +1,17 @@
+"""Mamba2-780m — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.models.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m",
+    arch_type="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4),
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

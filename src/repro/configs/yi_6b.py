@@ -1,0 +1,15 @@
+"""Yi-6B — llama-arch GQA decoder [arXiv:2403.04652]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    source="arXiv:2403.04652",
+)

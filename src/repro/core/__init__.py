@@ -1,0 +1,10 @@
+"""Acme's core: actors, learners, agents, environment loops, variable flow."""
+from repro.core.actors import FeedForwardActor, RecurrentActor  # noqa: F401
+from repro.core.agent import Agent  # noqa: F401
+from repro.core.interfaces import Actor, Learner, VariableSource, Worker  # noqa: F401
+from repro.core.loop import Counter, EnvironmentLoop  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    ArraySpec, BoundedArraySpec, DiscreteArraySpec, Environment,
+    EnvironmentSpec, StepType, TimeStep, Transition, make_environment_spec,
+    restart, termination, transition, truncation)
+from repro.core.variable import VariableClient, VariableServer  # noqa: F401

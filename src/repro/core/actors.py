@@ -1,0 +1,97 @@
+"""Generic actors (§2.3): feed-forward and recurrent.
+
+A ``FeedForwardActor`` evaluates a jitted policy function and forwards its
+observations to an adder; a ``RecurrentActor`` additionally threads a
+recurrent core state between ``select_action`` calls and stores the state at
+sequence starts (R2D2's stale-state mechanism).  Both pull weights from a
+``VariableClient`` on ``update()`` — they never own the learner.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.core.interfaces import Actor
+from repro.core.types import TimeStep
+from repro.core.variable import VariableClient
+
+if TYPE_CHECKING:  # avoid core <-> adders circular import at runtime
+    from repro.adders.base import Adder
+
+PolicyFn = Callable[..., Any]   # (params, key, obs) -> action
+
+
+class FeedForwardActor(Actor):
+    def __init__(self, policy: PolicyFn, variable_client: VariableClient,
+                 adder: Optional["Adder"] = None, rng_seed: int = 0,
+                 jit: bool = True):
+        self._policy = jax.jit(policy) if jit else policy
+        self._client = variable_client
+        self._adder = adder
+        self._key = jax.random.key(rng_seed)
+
+    def select_action(self, observation):
+        self._key, sub = jax.random.split(self._key)
+        action = self._policy(self._client.params, sub,
+                              jnp.asarray(observation))
+        return np.asarray(action)
+
+    def observe_first(self, timestep: TimeStep):
+        if self._adder:
+            self._adder.add_first(timestep)
+
+    def observe(self, action, next_timestep: TimeStep):
+        if self._adder:
+            self._adder.add(action, next_timestep)
+
+    def update(self, wait: bool = False):
+        self._client.update(wait)
+
+
+class RecurrentActor(Actor):
+    def __init__(self, policy: PolicyFn, initial_state_fn: Callable[[], Any],
+                 variable_client: VariableClient,
+                 adder: Optional["Adder"] = None, rng_seed: int = 0,
+                 store_state: bool = True, jit: bool = True):
+        self._policy = jax.jit(policy) if jit else policy
+        self._initial_state_fn = initial_state_fn
+        self._client = variable_client
+        self._adder = adder
+        self._key = jax.random.key(rng_seed)
+        self._state = None
+        self._prev_state = None
+        self._store_state = store_state
+
+    def select_action(self, observation):
+        if self._state is None:
+            self._state = self._initial_state_fn()
+        self._key, sub = jax.random.split(self._key)
+        self._prev_state = self._state
+        action, self._state = self._policy(self._client.params, sub,
+                                           jnp.asarray(observation), self._state)
+        return np.asarray(action)
+
+    def observe_first(self, timestep: TimeStep):
+        self._state = self._initial_state_fn()
+        if self._adder:
+            extras = ()
+            if self._store_state:
+                extras = jax.tree.map(np.asarray, self._state)
+            if hasattr(self._adder, "add_first") and isinstance(
+                    getattr(self._adder, "add_first"), Callable):
+                try:
+                    self._adder.add_first(timestep, extras)   # sequence adder
+                except TypeError:
+                    self._adder.add_first(timestep)
+
+    def observe(self, action, next_timestep: TimeStep):
+        if self._adder:
+            self._adder.add(action, next_timestep)
+
+    def update(self, wait: bool = False):
+        self._client.update(wait)

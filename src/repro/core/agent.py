@@ -1,0 +1,55 @@
+"""The synchronous learning agent (§2.2): an actor that owns a learner and
+triggers learner steps from update(), governed by a local
+min_observations / observations_per_step schedule (the single-process
+equivalent of the rate limiter's SPI)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.interfaces import Actor, Learner
+from repro.core.types import TimeStep
+
+
+class Agent(Actor):
+    def __init__(self, actor: Actor, learner: Learner,
+                 min_observations: int, observations_per_step: float,
+                 can_step=None):
+        self._actor = actor
+        self._learner = learner
+        self._min_observations = min_observations
+        self._observations_per_step = observations_per_step
+        self._num_observations = 0
+        # synchronous-safety guard: don't call a learner step that would
+        # block on the dataset (queue not yet holding a full batch).
+        self._can_step = can_step
+
+    def select_action(self, observation):
+        return self._actor.select_action(observation)
+
+    def observe_first(self, timestep: TimeStep):
+        self._actor.observe_first(timestep)
+
+    def observe(self, action, next_timestep: TimeStep):
+        self._num_observations += 1
+        self._actor.observe(action, next_timestep)
+
+    def update(self, wait: bool = False):
+        n = self._num_observations - self._min_observations
+        if n < 0:
+            return
+        if self._observations_per_step >= 1:
+            num_steps = int(n % int(self._observations_per_step) == 0)
+        else:
+            num_steps = int(1 / self._observations_per_step)
+        stepped = 0
+        for _ in range(num_steps):
+            if self._can_step is not None and not self._can_step():
+                break
+            self._learner.step()
+            stepped += 1
+        if stepped:
+            self._actor.update()
+
+    @property
+    def learner(self) -> Learner:
+        return self._learner

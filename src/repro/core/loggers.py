@@ -1,0 +1,70 @@
+"""Loggers (the §4.2 measurement apparatus): terminal, CSV, in-memory, and
+fan-out — pluggable anywhere a ``logger`` callable is accepted (environment
+loops, learners, evaluators)."""
+from __future__ import annotations
+
+import csv
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class TerminalLogger:
+    def __init__(self, label: str = "", every_s: float = 0.0):
+        self.label = label
+        self.every_s = every_s
+        self._last = 0.0
+
+    def __call__(self, values: Dict[str, Any]):
+        now = time.time()
+        if now - self._last < self.every_s:
+            return
+        self._last = now
+        items = ", ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                          for k, v in sorted(values.items()))
+        print(f"[{self.label}] {items}", flush=True)
+
+
+class CSVLogger:
+    """Appends rows; writes the header from the first row's keys."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._lock = threading.Lock()
+        self._fieldnames: Optional[List[str]] = None
+
+    def __call__(self, values: Dict[str, Any]):
+        with self._lock:
+            new = not os.path.exists(self.path)
+            if self._fieldnames is None:
+                if new:
+                    self._fieldnames = sorted(values)
+                else:
+                    with open(self.path) as f:
+                        self._fieldnames = next(csv.reader(f))
+            with open(self.path, "a", newline="") as f:
+                w = csv.DictWriter(f, self._fieldnames, extrasaction="ignore")
+                if new:
+                    w.writeheader()
+                w.writerow(values)
+
+
+class InMemoryLogger:
+    def __init__(self):
+        self.rows: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+
+    def __call__(self, values: Dict[str, Any]):
+        with self._lock:
+            self.rows.append(dict(values))
+
+
+class Dispatcher:
+    def __init__(self, *loggers):
+        self.loggers = loggers
+
+    def __call__(self, values: Dict[str, Any]):
+        for lg in self.loggers:
+            lg(values)

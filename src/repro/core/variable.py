@@ -1,0 +1,53 @@
+"""Variable distribution: the learner is a VariableSource; actors poll it
+through a VariableClient (Fig 4's proxy-actor pattern — pull, not push)."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+from repro.core.interfaces import VariableSource
+
+
+class VariableClient:
+    def __init__(self, source: VariableSource, names: Sequence[str] = ("policy",),
+                 update_period: int = 1):
+        self._source = source
+        self._names = tuple(names)
+        self._period = max(int(update_period), 1)
+        self._calls = 0
+        self._params: Optional[List[Any]] = None
+
+    @property
+    def params(self):
+        if self._params is None:
+            self.update_and_wait()
+        return self._params[0] if len(self._names) == 1 else self._params
+
+    def update(self, wait: bool = False):
+        """Poll the source every `update_period` calls (async in real Acme;
+        synchronous here — the call itself is cheap in-process)."""
+        self._calls += 1
+        if wait or self._params is None or self._calls % self._period == 0:
+            self.update_and_wait()
+
+    def update_and_wait(self):
+        self._params = self._source.get_variables(self._names)
+
+
+class VariableServer(VariableSource):
+    """Thread-safe holder used by learners to publish weights."""
+
+    def __init__(self, **named_vars):
+        self._lock = threading.Lock()
+        self._vars = dict(named_vars)
+
+    def publish(self, name: str, value):
+        with self._lock:
+            self._vars[name] = value
+
+    def get_variables(self, names: Sequence[str] = ()):
+        with self._lock:
+            if not names:
+                names = list(self._vars)
+            return [self._vars[n] for n in names]

@@ -1,0 +1,126 @@
+"""Launchpad-lite (§2.4): a distributed program is a graph of nodes.
+
+Nodes are constructed lazily from factories; edges are *handles* — from the
+module's perspective a handle is indistinguishable from the object itself
+(Launchpad's key property: local vs remote calls look identical).  The local
+launcher runs each worker node in its own thread; a real fleet would place
+each node in its own process/host with RPC edges, with no change to node code.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+class Handle:
+    """Lazy proxy to a node's constructed object (client side of an edge)."""
+
+    def __init__(self, program: "Program", name: str):
+        self._program = program
+        self._name = name
+
+    def dereference(self):
+        return self._program.resolve(self._name)
+
+    def __getattr__(self, item):
+        # method-call forwarding: handle.method(...) == object.method(...)
+        obj = self.dereference()
+        return getattr(obj, item)
+
+
+class Node:
+    def __init__(self, name: str, factory: Callable[..., Any],
+                 args: tuple, kwargs: dict, is_worker: bool):
+        self.name = name
+        self.factory = factory
+        self.args = args
+        self.kwargs = kwargs
+        self.is_worker = is_worker
+        self.instance: Any = None
+
+
+class Program:
+    def __init__(self, name: str = "program"):
+        self.name = name
+        self._nodes: Dict[str, Node] = {}
+        self._order: List[str] = []
+        # RLock: resolving a node dereferences its Handle arguments, which
+        # re-enters resolve() on the same thread.
+        self._lock = threading.RLock()
+
+    def add_node(self, name: str, factory: Callable[..., Any], *args,
+                 is_worker: bool = False, **kwargs) -> Handle:
+        if name in self._nodes:
+            raise ValueError(f"duplicate node {name!r}")
+        self._nodes[name] = Node(name, factory, args, kwargs, is_worker)
+        self._order.append(name)
+        return Handle(self, name)
+
+    def resolve(self, name: str):
+        with self._lock:
+            node = self._nodes[name]
+            if node.instance is None:
+                args = [a.dereference() if isinstance(a, Handle) else a
+                        for a in node.args]
+                kwargs = {k: (v.dereference() if isinstance(v, Handle) else v)
+                          for k, v in node.kwargs.items()}
+                node.instance = node.factory(*args, **kwargs)
+            return node.instance
+
+    @property
+    def nodes(self) -> List[Node]:
+        return [self._nodes[n] for n in self._order]
+
+
+class LocalLauncher:
+    """Run worker nodes on threads (the single-machine Launchpad backend)."""
+
+    def __init__(self, program: Program):
+        self.program = program
+        self.threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._errors: List[BaseException] = []
+
+    def launch(self):
+        # construct everything first (resolves the graph edges)
+        for node in self.program.nodes:
+            self.program.resolve(node.name)
+        for node in self.program.nodes:
+            if not node.is_worker:
+                continue
+            t = threading.Thread(target=self._run_node, args=(node,),
+                                 name=node.name, daemon=True)
+            self.threads.append(t)
+            t.start()
+        return self
+
+    def _run_node(self, node: Node):
+        try:
+            node.instance.run()
+        except StopIteration:
+            pass
+        except Exception as e:  # pragma: no cover
+            if not self._stop.is_set():
+                self._errors.append(e)
+
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def stop(self):
+        self._stop.set()
+        for node in self.program.nodes:
+            inst = node.instance
+            if inst is not None and hasattr(inst, "stop"):
+                try:
+                    inst.stop()
+                except Exception:
+                    pass
+
+    def join(self, timeout: Optional[float] = None):
+        deadline = None if timeout is None else time.time() + timeout
+        for t in self.threads:
+            remaining = None if deadline is None else max(deadline - time.time(), 0)
+            t.join(remaining)
+        if self._errors:
+            raise self._errors[0]

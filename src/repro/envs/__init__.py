@@ -1,0 +1,5 @@
+from repro.envs.bsuite_like import Bandit, MemoryChain  # noqa: F401
+from repro.envs.cartpole import CartpoleSwingup, PendulumSwingup  # noqa: F401
+from repro.envs.catch import Catch  # noqa: F401
+from repro.envs.deep_sea import DeepSea  # noqa: F401
+from repro.envs.token_lm import TokenChain  # noqa: F401

@@ -1,0 +1,47 @@
+"""Catch (bsuite): a falling ball must be caught by a paddle. Discrete."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import types
+
+
+class Catch(types.Environment):
+    def __init__(self, rows: int = 10, columns: int = 5, seed: int = 0):
+        self.rows, self.columns = rows, columns
+        self._rng = np.random.RandomState(seed)
+        self._ball = None
+        self._paddle = None
+        self._done = True
+
+    def observation_spec(self):
+        return types.ArraySpec((self.rows, self.columns), np.float32, "board")
+
+    def action_spec(self):
+        return types.DiscreteArraySpec((), np.int32, "action", num_values=3)
+
+    def _board(self):
+        b = np.zeros((self.rows, self.columns), np.float32)
+        r, c = self._ball
+        if r < self.rows:
+            b[r, c] = 1.0
+        b[self.rows - 1, self._paddle] = 1.0
+        return b
+
+    def reset(self):
+        self._ball = [0, int(self._rng.randint(self.columns))]
+        self._paddle = self.columns // 2
+        self._done = False
+        return types.restart(self._board())
+
+    def step(self, action):
+        if self._done:
+            return self.reset()
+        self._paddle = int(np.clip(self._paddle + int(action) - 1,
+                                   0, self.columns - 1))
+        self._ball[0] += 1
+        if self._ball[0] == self.rows - 1:
+            self._done = True
+            reward = 1.0 if self._ball[1] == self._paddle else -1.0
+            return types.termination(reward, self._board())
+        return types.transition(0.0, self._board())

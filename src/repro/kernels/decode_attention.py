@@ -1,0 +1,88 @@
+"""Single-token decode attention (flash-decoding) as a Pallas TPU kernel.
+
+The serve-path hot spot: one query head-block against a long KV cache.
+Grid: (batch, heads, kv_blocks); the kv dimension is sequential with the
+online-softmax partials (m, l, acc) in VMEM scratch, so the cache is streamed
+HBM->VMEM exactly once.  Variable-length caches are handled with a per-batch
+``lengths`` vector masking the tail block.
+
+Validated with ``interpret=True`` against ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale, bk, nk):
+    ki = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (1, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (1, bk)
+
+    length = len_ref[b]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30))[0].astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (b, h, d); k, v: (b, s, h, d) MHA layout; lengths: (b,) int32."""
+    b, h, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    assert s % bk == 0, (s, bk)
+    nk = s // bk
+    kernel = functools.partial(_decode_kernel, scale=d ** -0.5, bk=bk, nk=nk)
+    # layout: q (b, h, 1, d) blocks; k/v (b, s, h, d) -> block (1, bk, 1, d)
+    q4 = q[:, :, None, :]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec(lengths.shape, lambda b_, h_, k_: (0,)),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, k_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, k_: (b_, k_, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h_, k_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q4, k, v)

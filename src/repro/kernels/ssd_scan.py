@@ -1,0 +1,93 @@
+"""Mamba2 SSD chunk scan as a Pallas TPU kernel.
+
+Grid: (batch, heads, chunks); the chunk dimension is sequential with the
+inter-chunk SSM state (n, p) carried in VMEM scratch — the TPU-native
+equivalent of Mamba2's fused CUDA chunk-scan: all heavy ops inside a chunk
+are (chunk x chunk) / (chunk x n) matmuls that map to the MXU, and the
+recurrence across chunks is a scalar-decay state update done once per grid
+step instead of a per-token scan.
+
+Validated with ``interpret=True`` against ``ref.ssd_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk, n, p):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (chunk, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (chunk, 1) -> squeeze
+    dt = dt[:, 0]
+    a = a_ref[0]                               # scalar decay rate (f32)
+    B = b_ref[0].astype(jnp.float32)           # (chunk, n)
+    C = c_ref[0].astype(jnp.float32)           # (chunk, n)
+
+    dA = dt * a                                # (chunk,) log decays
+    cum = jnp.cumsum(dA)                       # within-chunk cumulative
+
+    # intra-chunk: L[i, j] = exp(cum_i - cum_j) for j <= i
+    seg = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(qi >= kj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (chunk, chunk)
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))        # (chunk, p)
+
+    # inter-chunk: contribution of the carried state
+    decay_from_start = jnp.exp(cum)                                # (chunk,)
+    y += (jax.lax.dot_general(C, state_ref[...], (((1,), (0,)), ((), ())))
+          * decay_from_start[:, None])
+
+    # state update: h <- h * exp(sum dA) + sum_j B_j dt_j decay_to_end_j x_j
+    decay_to_end = jnp.exp(cum[-1] - cum)                          # (chunk,)
+    weighted_B = B * (dt * decay_to_end)[:, None]                  # (chunk, n)
+    new_state = jax.lax.dot_general(weighted_B, x, (((0,), (0,)), ((), ())))
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + new_state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h) (>0); A: (h,) negative;
+    B, C: (b, s, n) (single group). Returns y: (b, s, h, p) float32."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    # rearrange to head-major blocks: x (b, h, s, p), dt (b, h, s, 1)
+    xh = jnp.moveaxis(x, 2, 1)
+    dth = jnp.moveaxis(dt, 2, 1)[..., None]
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n=n, p=p)
+    yh = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xh, dth, A.astype(jnp.float32), B, C)
+    return jnp.moveaxis(yh, 1, 2)

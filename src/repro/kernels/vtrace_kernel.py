@@ -1,0 +1,72 @@
+"""V-trace (IMPALA off-policy correction) as a Pallas TPU kernel.
+
+The RL-specific sequence hot spot: the backward recurrence
+``vs_t - V_t = delta_t + gamma_t c_t (vs_{t+1} - V_{t+1})`` over long
+learner sequences.  Grid: (batch_blocks,) — each grid step loads a
+(T, block_b) tile into VMEM, runs the reverse recurrence with a
+``fori_loop`` over T entirely in VMEM, and writes both the targets and the
+policy-gradient advantages.  On TPU this turns a memory-bound per-step scan
+into a single VMEM-resident pass.
+
+Validated with ``interpret=True`` against ``ref.vtrace_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vtrace_kernel(v_ref, nv_ref, r_ref, g_ref, rho_ref, vs_ref, adv_ref,
+                   acc_ref, *, T, clip_rho, clip_c):
+    values = v_ref[...].astype(jnp.float32)       # (T, bb)
+    next_values = nv_ref[...].astype(jnp.float32)
+    rewards = r_ref[...].astype(jnp.float32)
+    discounts = g_ref[...].astype(jnp.float32)
+    rhos = rho_ref[...].astype(jnp.float32)
+
+    rho_c = jnp.minimum(rhos, clip_rho)
+    cs = jnp.minimum(rhos, clip_c)
+    deltas = rho_c * (rewards + discounts * next_values - values)
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(i, _):
+        t = T - 1 - i
+        acc = acc_ref[0]
+        new = deltas[t] + discounts[t] * cs[t] * acc
+        vs_ref[t, :] = (values[t] + new).astype(vs_ref.dtype)
+        acc_ref[0] = new
+        return ()
+
+    jax.lax.fori_loop(0, T, body, ())
+
+    vs = vs_ref[...].astype(jnp.float32)
+    vs_next = jnp.concatenate([vs[1:], next_values[-1:]], axis=0)
+    adv_ref[...] = (rho_c * (rewards + discounts * vs_next - values)
+                    ).astype(adv_ref.dtype)
+
+
+def vtrace(values, next_values, rewards, discounts, rhos, *,
+           clip_rho: float = 1.0, clip_c: float = 1.0,
+           block_b: int = 128, interpret: bool = False):
+    """All inputs time-major (T, B) float32. Returns (vs, pg_advantages)."""
+    T, Bt = values.shape
+    bb = min(block_b, Bt)
+    assert Bt % bb == 0
+    kernel = functools.partial(_vtrace_kernel, T=T, clip_rho=clip_rho,
+                               clip_c=clip_c)
+    spec = pl.BlockSpec((T, bb), lambda b_: (0, b_))
+    vs, adv = pl.pallas_call(
+        kernel,
+        grid=(Bt // bb,),
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((T, Bt), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((1, bb), jnp.float32)],
+        interpret=interpret,
+    )(values, next_values, rewards, discounts, rhos)
+    return vs, adv

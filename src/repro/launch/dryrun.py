@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) combo.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) from placeholder host
+devices, jits the train/prefill/serve step with ShapeDtypeStruct inputs, and
+records memory_analysis(), cost_analysis(), and the HLO-derived roofline
+terms (repro.launch.hlo_analysis) to a JSONL file.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shlib
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.param_sharding import tree_shardings
+from repro.launch.specs import decode_specs, input_specs, params_specs
+from repro.launch.steps import (TrainState, make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.optim import adam
+
+SKIPS = {
+    # (arch, shape): reason — recorded, not silently dropped.
+    ("whisper-base", "long_500k"):
+        "enc-dec full attention; no sub-quadratic variant in family (DESIGN.md)",
+}
+
+# Per-combo production configs required to fit 16 GiB HBM (EXPERIMENTS.md
+# §Perf documents the baseline-vs-optimized deltas for each).
+COMBO_OVERRIDES = {
+    # 7B-class decode with 128 x 32k contexts: f8 KV cache + unrolled layers
+    ("codeqwen1.5-7b", "decode_32k"): dict(cache_dtype="f8",
+                                           cache_layout="list"),
+    ("deepseek-7b", "decode_32k"): dict(cache_dtype="f8",
+                                        cache_layout="list"),
+    ("internvl2-26b", "decode_32k"): dict(cache_dtype="f8",
+                                          cache_layout="list"),
+    # MoE with tiny experts: 16 microbatches to bound activation live-set
+    ("granite-moe-3b-a800m", "train_4k"): dict(microbatches=16),
+}
+# dense/moe/vlm archs run long_500k with the sliding-window variant.
+SLIDING_WINDOW_FOR_LONG = 8192
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def batch_shardings(rules, specs):
+    def spec_for(path, x):
+        nd = len(x.shape)
+        if nd == 0:
+            return rules.named_sharding((), ())
+        logical = ["batch"] + [None] * (nd - 1)
+        return rules.named_sharding(tuple(logical), x.shape)
+    return jax.tree_util.tree_map_with_path(spec_for, specs)
+
+
+def cache_shardings(rules, cache_specs):
+    """Decode caches: (layers, batch, length, kv_heads, head_dim) KV tensors,
+    (layers, batch, heads, state, head_dim) SSM states, conv states."""
+    def spec_for(path, x):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        leaf = str(names[-1]) if names else ""
+        nd = len(x.shape)
+
+        def align(core):
+            """Right-align the core logical axes; pad front with 'layers'."""
+            if nd <= len(core):
+                return core[-nd:]
+            return ["layers"] * (nd - len(core)) + core
+
+        if leaf in ("k", "v") or leaf.startswith("cross"):
+            log = align(["batch", "kv_seq", "kv_heads", "head_dim"])
+        elif leaf == "state":
+            log = align(["batch", "ssm_heads", "ssm_state", None])
+        elif leaf == "conv":
+            log = align(["batch", None, "ff"])
+        else:
+            log = [None] * nd
+        return rules.named_sharding(tuple(log), x.shape)
+    return jax.tree_util.tree_map_with_path(spec_for, cache_specs)
+
+
+def model_flops_analytic(cfg, shape):
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = active params."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch     # decode: one token per sequence
+
+
+def build_step_and_args(cfg, shape, rules, objective="bc", remat="full",
+                        microbatches=8, cache_dtype=jnp.bfloat16,
+                        cache_layout="stacked"):
+    pspecs = params_specs(cfg, jnp.bfloat16)
+    psh = tree_shardings(pspecs, rules)
+    repl = rules.named_sharding((), ())
+
+    if shape.kind == "train":
+        opt = adam(1e-4, clip=1.0)
+        step_fn = make_train_step(cfg, opt, objective=objective, remat=remat,
+                                  microbatches=microbatches)
+        state_specs = jax.eval_shape(
+            lambda p: TrainState(p, opt.init(p), jnp.zeros((), jnp.int32),
+                                 p if objective == "dqn" else None),
+            pspecs)
+        opt_sh = tree_shardings(state_specs.opt_state, rules, zero=True)  # ZeRO-1
+        state_sh = TrainState(psh, opt_sh, repl,
+                              psh if objective == "dqn" else None)
+        batch = input_specs(cfg, shape)
+        bsh = batch_shardings(rules, batch)
+        metrics_sh = None
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_sh, bsh),
+                         out_shardings=(state_sh, metrics_sh),
+                         donate_argnums=(0,))
+        return jitted, (state_specs, batch)
+
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        batch = input_specs(cfg, shape)
+        bsh = batch_shardings(rules, batch)
+        jitted = jax.jit(step_fn, in_shardings=(psh, bsh), out_shardings=None)
+        return jitted, (pspecs, batch)
+
+    # decode
+    step_fn = make_serve_step(cfg)
+    d = decode_specs(cfg, shape, cache_dtype=cache_dtype, layout=cache_layout)
+    csh = cache_shardings(rules, d["cache"])
+    tok_sh = rules.named_sharding(("batch", None), d["token"].shape)
+    logits_sh = rules.named_sharding(
+        ("batch", "vocab"), (shape.global_batch, cfg.vocab_size))
+    jitted = jax.jit(step_fn,
+                     in_shardings=(psh, csh, tok_sh, repl),
+                     out_shardings=(tok_sh, logits_sh, csh),
+                     donate_argnums=(1,))
+    return jitted, (pspecs, d["cache"], d["token"], d["pos"])
+
+
+def run_combo(arch_name, shape_name, mesh_kind, objective="bc", remat="full",
+              rules_overrides=None, tag="baseline", microbatches=8,
+              cache_dtype=jnp.bfloat16, cache_layout="stacked",
+              moe_group=None, moe_cf=None):
+    import dataclasses  # noqa: F401 (used below)
+    cfg = get_arch(arch_name)
+    if cfg.moe is not None and (moe_group or moe_cf):
+        moe_updates = {}
+        if moe_group:
+            moe_updates["group_size"] = moe_group
+        if moe_cf:
+            moe_updates["capacity_factor"] = moe_cf
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_updates))
+    shape = get_shape(shape_name)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "objective": objective if shape.kind == "train" else shape.kind,
+           "tag": tag}
+    ov = COMBO_OVERRIDES.get((arch_name, shape_name))
+    if ov:
+        rec["combo_overrides"] = {k: str(v) for k, v in ov.items()}
+        if "cache_dtype" in ov:
+            cache_dtype = jnp.float8_e4m3fn if ov["cache_dtype"] == "f8" \
+                else cache_dtype
+        cache_layout = ov.get("cache_layout", cache_layout)
+        microbatches = ov.get("microbatches", microbatches)
+    if (arch_name, shape_name) in SKIPS:
+        rec["status"] = "skipped"
+        rec["reason"] = SKIPS[(arch_name, shape_name)]
+        return rec
+    if shape_name == "long_500k":
+        if cfg.arch_type in ("dense", "moe", "vlm"):
+            cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_FOR_LONG)
+            rec["variant"] = f"sliding_window={SLIDING_WINDOW_FOR_LONG}"
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    overrides = dict(rules_overrides or {})
+    if shape.kind == "decode" and cfg.num_kv_heads % model_size != 0:
+        # KV heads don't divide the model axis: shard the cache's head_dim
+        # instead (scores become sharded partial sums over head_dim — XLA
+        # inserts the all-reduce; the cache update stays local).
+        overrides.setdefault("kv_seq", None)
+        overrides.setdefault("head_dim", "model")
+        rec["kv_layout"] = "headdim-sharded"
+    if cfg.num_heads and cfg.num_heads % model_size != 0:
+        # heads don't divide the model axis: sequence-parallel attention
+        # (otherwise attention compute replicates onto every chip).
+        # Un-chunked seq-par scores are (rows/dev, h, sq/model, sk) f32 —
+        # only enable when that buffer stays well under HBM (train is
+        # microbatched; prefill only at <=1 row per device).
+        data_shards = n_chips // model_size
+        rows_per_dev = max(shape.global_batch // data_shards, 1)
+        mb = microbatches if shape.kind == "train" else 1
+        score_gb = (rows_per_dev / mb) * cfg.num_heads * \
+            (shape.seq_len / model_size) * shape.seq_len * 4 / 2 ** 30
+        if shape.kind in ("train", "prefill") and score_gb <= 8.0:
+            overrides.setdefault("q_seq", "model")
+            rec["attn_layout"] = "seq-parallel"
+    rules = shlib.ShardingRules(mesh, overrides)
+    t0 = time.time()
+    try:
+        with shlib.use_rules(rules):
+            jitted, args = build_step_and_args(cfg, shape, rules,
+                                               objective=objective, remat=remat,
+                                               microbatches=microbatches,
+                                               cache_dtype=cache_dtype,
+                                               cache_layout=cache_layout)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    rec["chips"] = n_chips
+    rec["params"] = cfg.num_params()
+    rec["active_params"] = cfg.num_active_params()
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        }
+        live = ma.argument_size_in_bytes + ma.temp_size_in_bytes \
+            - ma.alias_size_in_bytes + max(
+                ma.output_size_in_bytes - ma.alias_size_in_bytes, 0)
+        rec["memory"]["approx_live_bytes"] = live
+        rec["memory"]["fits_hbm"] = bool(live <= HBM_PER_CHIP)
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        rec["xla_cost"] = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                           if k in ca}
+    except Exception as e:  # pragma: no cover
+        rec["xla_cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    an = hlo_analysis.analyze(hlo)
+    rec["hlo"] = an.as_dict()
+    rec["hlo"]["dot_flops"] = an.dot_flops
+    rec["hlo"]["conv_flops"] = an.conv_flops
+
+    # --- roofline terms (per chip; module is already per-device) ---
+    model_flops = model_flops_analytic(cfg, shape)
+    compute_s = an.flops / PEAK_FLOPS_BF16
+    memory_s = an.hbm_bytes / HBM_BW
+    collective_s = an.collective_bytes / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    rec["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / an.flops if an.flops else 0.0,
+    }
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--objective", default="bc", choices=["bc", "dqn"])
+    p.add_argument("--remat", default="full", choices=["full", "none", "dots"])
+    p.add_argument("--tag", default="baseline")
+    p.add_argument("--microbatches", type=int, default=8)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="results/dryrun.jsonl")
+    args = p.parse_args(argv)
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mesh_kind in meshes:
+                    t0 = time.time()
+                    rec = run_combo(arch, shape, mesh_kind,
+                                    objective=args.objective,
+                                    remat=args.remat, tag=args.tag,
+                                    microbatches=args.microbatches)
+                    rec["wall_s"] = round(time.time() - t0, 1)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    status = rec["status"]
+                    if status == "error":
+                        n_fail += 1
+                        print(f"[FAIL] {arch} x {shape} x {mesh_kind}: "
+                              f"{rec['error']}", file=sys.stderr)
+                    else:
+                        extra = ""
+                        if status == "ok":
+                            r = rec["roofline"]
+                            extra = (f" dom={r['dominant']}"
+                                     f" c={r['compute_s']:.4f}s"
+                                     f" m={r['memory_s']:.4f}s"
+                                     f" n={r['collective_s']:.4f}s")
+                        print(f"[{status}] {arch} x {shape} x {mesh_kind}"
+                              f" ({rec['wall_s']}s){extra}")
+                        if status == "ok":
+                            print("  memory:", rec["memory"])
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

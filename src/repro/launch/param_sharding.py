@@ -1,0 +1,90 @@
+"""Name-based logical axes for every parameter leaf in the model zoo.
+
+``param_logical_axes(path, shape)`` returns a tuple of logical axis names
+(resolved to mesh axes by :class:`repro.sharding.ShardingRules`, which also
+handles divisibility fallbacks — e.g. 4 KV heads on a 16-way model axis
+degrade to replication rather than failing to lower).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def _key_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return tuple(names)
+
+
+def param_logical_axes(path, shape) -> Tuple[Optional[str], ...]:
+    names = _key_names(path)
+    leaf = names[-1] if names else ""
+    parents = set(names[:-1])
+    nd = len(shape)
+
+    def pad(axes):
+        """Left-pad with stacked-layer axes (scan stacking adds 1-2 dims)."""
+        extra = nd - len(axes)
+        return tuple(["layers"] * extra) + tuple(axes)
+
+    if leaf == "table":                      # embed / lm_head: (V, d)
+        # if vocab doesn't divide the model axis (92553, 51865, ...) the
+        # embed_d rule shards d_model instead (axis-dedup keeps it legal).
+        return ("vocab", "embed_d")
+    if leaf in ("scale", "A_log", "dt_bias", "D", "conv_b", "q_norm", "k_norm"):
+        return pad([None] * 1) if nd >= 1 else ()
+    if leaf == "wq":
+        return pad(("d_model", "heads", "head_dim"))
+    if leaf in ("wk", "wv"):
+        return pad(("d_model", "kv_heads", "head_dim"))
+    if leaf == "wo":
+        return pad(("heads", "head_dim", "d_model"))
+    if leaf in ("w_gate", "w_up"):
+        if "experts" in parents:             # (E, d, f)
+            return pad(("experts", "d_model", "expert_ff"))
+        return pad(("d_model", "ff"))
+    if leaf == "w_down":
+        if "experts" in parents:             # (E, f, d)
+            return pad(("experts", "expert_ff", "d_model"))
+        return pad(("ff", "d_model"))
+    if leaf == "router":                     # (d, E) — replicated (tiny)
+        return pad(("d_model", None))
+    if leaf == "in_proj":                    # (d, packed) — packed dim on model
+        return pad(("d_model", "ff"))
+    if leaf == "out_proj":                   # (d_inner, d)
+        return pad(("ff", "d_model"))
+    if leaf == "conv_w":                     # (w, channels)
+        return pad((None, "ff"))
+    return tuple([None] * nd)
+
+
+def tree_logical_axes(tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: param_logical_axes(path, x.shape), tree)
+
+
+def tree_pspecs(tree, rules):
+    """PartitionSpec pytree for a param(-like) pytree under ``rules``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: rules.mesh_axes(param_logical_axes(path, x.shape), x.shape),
+        tree)
+
+
+def tree_shardings(tree, rules, zero: bool = False):
+    """``zero=True`` additionally shards each leaf's first free divisible dim
+    over the data(+pod) axes — ZeRO-1 optimizer-state partitioning."""
+    from jax.sharding import NamedSharding
+
+    def one(path, x):
+        spec = rules.mesh_axes(param_logical_axes(path, x.shape), x.shape)
+        if zero and x.ndim:
+            spec = rules.zero_spec(spec, x.shape)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function consumes — weak-type-correct, shardable, and allocation-free.
+Modality frontends are stubs per the brief: VLM batches carry precomputed
+patch embeddings, audio batches carry precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ArchConfig, InputShape
+
+Specs = Dict[str, Any]
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_specs(cfg: ArchConfig, shape: InputShape,
+                act_dtype=jnp.bfloat16) -> Specs:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.vision_tokens if cfg.arch_type == "vlm" else s
+    batch: Specs = {
+        "tokens": sds((b, text), jnp.int32),
+        "labels": sds((b, text), jnp.int32),
+        "rewards": sds((b, text), jnp.float32),
+        "discounts": sds((b, text), jnp.float32),
+    }
+    if cfg.arch_type == "vlm":
+        batch["vision"] = sds((b, cfg.vision_tokens, cfg.d_model), act_dtype)
+    if cfg.arch_type == "audio":
+        batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), act_dtype)
+    return batch
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape,
+                  act_dtype=jnp.bfloat16) -> Specs:
+    batch = train_specs(cfg, shape, act_dtype)
+    return {k: v for k, v in batch.items()
+            if k in ("tokens", "vision", "frames")}
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape,
+                 cache_dtype=jnp.bfloat16, layout: str = "stacked") -> Specs:
+    b, s = shape.global_batch, shape.seq_len
+    if layout == "list" and cfg.arch_type not in ("dense", "moe", "vlm"):
+        layout = "stacked"
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s, cache_dtype, layout=layout))
+    return {
+        "cache": cache,
+        "token": sds((b, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def params_specs(cfg: ArchConfig, param_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: transformer.init(jax.random.key(0), cfg, param_dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, **kw) -> Specs:
+    if shape.kind == "train":
+        return train_specs(cfg, shape, **kw)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape, **kw)
+    return decode_specs(cfg, shape, **kw)

@@ -1,0 +1,155 @@
+"""Step functions the launcher jits onto the mesh.
+
+``train_step`` is the Acme *learner* update (default objective: behaviour
+cloning / offline next-token CE, §3.7 of the paper; ``dqn`` gives the
+double-DQN TD objective of §3.2 with the LM head as Q-values).
+``prefill_step`` scores a full sequence (actor-side batched inference),
+``serve_step`` decodes one token against a KV/SSM cache (the distributed
+actor's ``select_action`` hot path, SEED-RL style).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ArchConfig
+from repro.optim import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    target_params: Any = None   # dqn objective only
+
+
+def init_train_state(rng, cfg: ArchConfig, opt: Optimizer, *,
+                     param_dtype=jnp.float32, objective="bc") -> TrainState:
+    params = transformer.init(rng, cfg, param_dtype)
+    target = params if objective == "dqn" else None
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32), target)
+
+
+def _bc_loss(params, cfg, batch, remat):
+    feats, aux = transformer.forward_features(params, cfg, batch, remat=remat)
+    from repro.sharding import shard
+    feats = shard(feats, "batch", None, "d_model")   # gather seq for the CE scan
+    table = transformer.unembed_table(params, cfg)
+    loss = layers.chunked_cross_entropy(feats[:, :-1], table,
+                                        batch["labels"][:, 1:],
+                                        valid_vocab=cfg.vocab_size)
+    metrics = {"ce": loss}
+    for k, v in aux.items():
+        loss = loss + v
+        metrics[k] = v
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _dqn_loss(params, target_params, cfg, batch, remat):
+    """Double-DQN 1-step TD over the token MDP; logits = Q(o_t, .)."""
+    q, aux = transformer.forward(params, cfg, batch, remat=remat)
+    q_target, _ = transformer.forward(target_params, cfg, batch, remat=remat)
+    q, q_target = q.astype(jnp.float32), q_target.astype(jnp.float32)
+    a_star = jnp.argmax(q[:, 1:], axis=-1)                       # online argmax
+    next_v = jnp.take_along_axis(q_target[:, 1:], a_star[..., None], -1)[..., 0]
+    y = batch["rewards"][:, :-1] + batch["discounts"][:, :-1] * \
+        jax.lax.stop_gradient(next_v)
+    q_taken = jnp.take_along_axis(q[:, :-1], batch["labels"][:, 1:][..., None],
+                                  -1)[..., 0]
+    loss = 0.5 * jnp.mean(jnp.square(y - q_taken))
+    for v in aux.values():
+        loss = loss + v
+    return loss, {"loss": loss, "td": loss}
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer, *, objective="bc",
+                    remat="full", target_period: int = 100,
+                    microbatches: int = 1):
+    """``microbatches > 1`` = gradient accumulation: the global batch is split
+    along axis 0 and scanned, dividing activation live-memory by M while
+    keeping the update mathematically identical (mean of microbatch grads)."""
+
+    def grad_fn(params, target_params, batch):
+        if objective == "bc":
+            return jax.grad(_bc_loss, has_aux=True)(params, cfg, batch, remat)
+        elif objective == "dqn":
+            return jax.grad(_dqn_loss, has_aux=True)(
+                params, target_params, cfg, batch, remat)
+        raise ValueError(objective)
+
+    def accumulate(params, target_params, batch):
+        if microbatches == 1:
+            return grad_fn(params, target_params, batch)
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, mbatch):
+            g, m = grad_fn(params, target_params, mbatch)
+            acc_g, acc_m = acc
+            acc_g = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                                 acc_g, g)
+            acc_m = jax.tree.map(lambda a, x: a + x / microbatches, acc_m, m)
+            return (acc_g, acc_m), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g0, m0 = jax.eval_shape(lambda: grad_fn(
+            params, target_params, jax.tree.map(lambda x: x[0], mb)))
+        zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), mb)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        grads, metrics = accumulate(state.params, state.target_params, batch)
+        if objective == "dqn":
+            from repro.optim import periodic_update
+            target = periodic_update(state.params, state.target_params,
+                                     state.step, target_period)
+        else:
+            target = state.target_params
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params, opt_state, state.step + 1, target)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, remat="none", chunk: int = 1024):
+    """Actor-side batched scoring: greedy actions per position + last-position
+    logits, computed over seq chunks so full (b, s, V) logits never live."""
+
+    def prefill_step(params, batch):
+        feats, _ = transformer.forward_features(params, cfg, batch, remat=remat)
+        table = transformer.unembed_table(params, cfg)
+        b, s, d = feats.shape
+        c = chunk if s % chunk == 0 else s
+        n = s // c
+
+        def body(_, xc):
+            logits = transformer.mask_pad_logits(
+                layers.unembed(table, xc), cfg)
+            return None, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        xs = jnp.moveaxis(feats.reshape(b, n, c, d), 1, 0)
+        _, acts = jax.lax.scan(body, None, xs)
+        actions = jnp.moveaxis(acts, 0, 1).reshape(b, s)
+        last_logits = transformer.mask_pad_logits(
+            layers.unembed(table, feats[:, -1]), cfg)
+        return {"actions": actions, "last_logits": last_logits}
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, token, pos):
+        logits, cache = transformer.decode_step(params, cfg, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+    return serve_step

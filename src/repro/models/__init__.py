@@ -1,0 +1,2 @@
+from repro.models import attention, config, layers, moe, ssm, transformer  # noqa: F401
+from repro.models.config import ArchConfig, InputShape, MoEConfig, SSMConfig  # noqa: F401

@@ -1,0 +1,190 @@
+"""GQA attention: chunked-causal training/prefill path + single-token decode.
+
+The training/prefill path scans over query chunks (flash-style: never
+materializes the full (S, S) score matrix) so that 32k-token prefill lowers
+with O(S * chunk) live memory.  Supports RoPE, Qwen3 qk-norm, sliding-window
+(banded) masking, and non-causal/cross attention for the Whisper encoder.
+
+GQA K/V are stored with ``num_kv_heads`` (cache compression) and broadcast to
+the full head count at compute time — the broadcast keeps every score tensor
+laid out (batch, heads, q, k) so SPMD head-sharding propagates cleanly.
+
+Positions are 1-D ``(seq,)`` — shared across the batch, which is true for all
+our training/prefill/decode paths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.sharding import shard
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.truncated_normal(ks[0], (d, h, hd), d ** -0.5, dtype),
+        "wk": layers.truncated_normal(ks[1], (d, kv, hd), d ** -0.5, dtype),
+        "wv": layers.truncated_normal(ks[2], (d, kv, hd), d ** -0.5, dtype),
+        "wo": layers.truncated_normal(ks[3], (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ArchConfig, x, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = layers.head_rmsnorm(params["q_norm"], q, cfg.rmsnorm_eps)
+        k = layers.head_rmsnorm(params["k_norm"], k, cfg.rmsnorm_eps)
+    if rope and cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = layers.apply_rope(k, positions[None, :], cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(k, q_per_kv: int):
+    """(b, s, kv, hd) -> (b, s, h, hd), sharded on the full head axis."""
+    if q_per_kv == 1:
+        return k
+    k = jnp.repeat(k, q_per_kv, axis=2)
+    return shard(k, "batch", "kv_seq", "heads", "head_dim")
+
+
+def _masked_softmax(scores, q_pos, k_pos, causal, window):
+    """scores: (b, h, sq, sk); q_pos: (sq,), k_pos: (sk,)."""
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def attention(params, cfg: ArchConfig, x, positions, *, causal=True,
+              q_chunk: int = 1024, kv: Optional[tuple] = None):
+    """Full-sequence attention. ``kv`` overrides K/V (cross-attention)."""
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=kv is None)
+    if kv is not None:
+        k, v = kv
+    sq, sk = q.shape[1], k.shape[1]
+    k_pos = positions if kv is None else jnp.arange(sk)
+    window = cfg.sliding_window
+    k = _repeat_kv(k, cfg.q_per_kv)
+    v = _repeat_kv(v, cfg.q_per_kv)
+    scale = cfg.head_dim ** -0.5
+
+    # sequence-parallel attention: when the q_seq rule maps to a mesh axis
+    # (heads not divisible by the model axis), shard query positions and
+    # compute un-chunked — scores are (b, h, sq/P, sk), already small.
+    # K/V are gathered to full sequence (replicated heads) and every score
+    # tensor is pinned to q_seq — otherwise the einsum's two free dims both
+    # want the model axis and the partitioner replicates the full (sq, sk)
+    # matrix.
+    from repro.sharding import current_rules
+    rules = current_rules()
+    seq_par = False
+    if rules is not None:
+        spec = rules.mesh_axes(("q_seq",), (sq,))
+        if spec and spec[0] is not None:
+            seq_par = True
+            q = shard(q, "batch", "q_seq", "heads", "head_dim")
+            k = shard(k, "batch", None, None, None)
+            v = shard(v, "batch", None, None, None)
+            q_chunk = sq
+
+    def block(q_blk, pos_blk):
+        scores = jnp.einsum("bqhk,bshk->bhqs", q_blk, k) * scale
+        if seq_par:
+            scores = shard(scores, "batch", None, "q_seq", None)
+        else:
+            scores = shard(scores, "batch", "heads", None, None)
+        p = _masked_softmax(scores, pos_blk, k_pos, causal, window).astype(v.dtype)
+        if seq_par:
+            p = shard(p, "batch", None, "q_seq", None)
+        out = jnp.einsum("bhqs,bshk->bqhk", p, v)
+        if seq_par:
+            return shard(out, "batch", "q_seq", "heads", "head_dim")
+        return shard(out, "batch", None, "heads", "head_dim")
+
+    if sq % q_chunk != 0:
+        q_chunk = sq          # non-divisible (e.g. whisper's 1500 frames)
+    if sq <= q_chunk:
+        out = block(q, positions)
+    else:
+        n = sq // q_chunk
+        qs = jnp.moveaxis(q.reshape(q.shape[0], n, q_chunk, *q.shape[2:]), 1, 0)
+        ps = positions.reshape(n, q_chunk)
+        out = jax.lax.map(lambda args: block(*args), (qs, ps))
+        out = jnp.moveaxis(out, 0, 1).reshape(q.shape[0], sq, q.shape[2], q.shape[3])
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ------------------------------------------------------------------ decode
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """One layer's cache. Sliding-window archs use a ring buffer of size W."""
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(params, cfg: ArchConfig, x, cache, pos, *,
+                     cross_kv: Optional[tuple] = None):
+    """One-token decode. x: (b, 1, d); pos: scalar int32 (current index).
+
+    K is stored pre-RoPE'd.  Returns (out, new_cache).
+    For ``cross_kv`` (whisper) the cache is passed through untouched.
+    """
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions, rope=cross_kv is None)
+    scale = cfg.head_dim ** -0.5
+
+    def score_softmax_out(k, v, valid):
+        # grouped GQA (no KV repeat): with sq == 1 every tensor here is tiny
+        # except the cache itself, which is read exactly once.
+        if k.dtype != q.dtype:      # quantized (e.g. f8) caches: upcast fuses
+            k = k.astype(q.dtype)
+            v = v.astype(q.dtype)
+        b = q.shape[0]
+        qg = q.reshape(b, 1, k.shape[2], cfg.q_per_kv, cfg.head_dim)
+        scores = jnp.einsum("bqngh,bsnh->bngqs", qg, k) * scale
+        if valid is not None:
+            scores = jnp.where(valid.reshape(1, 1, 1, 1, -1), scores, NEG_INF)
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+        out = jnp.einsum("bngqs,bsnh->bqngh", p, v)
+        out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        return score_softmax_out(k, v, None), cache
+
+    length = cache["k"].shape[1]
+    slot = jnp.mod(pos, length) if cfg.sliding_window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    new_cache = {"k": k, "v": v}
+
+    slots = jnp.arange(length)
+    if cfg.sliding_window:
+        # slot s holds token pos - ((pos - s) mod L); valid if that is >= 0
+        token_idx = pos - jnp.mod(pos - slots, length)
+        valid = token_idx >= 0
+    else:
+        valid = slots <= pos
+    return score_softmax_out(k, v, valid), new_cache

@@ -1,0 +1,148 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    return truncated_normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps=1e-6):
+    """RMSNorm over the last (head_dim) axis, per head — Qwen3 qk-norm."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                       # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq_len: int, d_model: int):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------- SwiGLU MLP
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = shard(jax.nn.silu(h) * u, "batch", "seq", "ff")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------- Embedding
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": truncated_normal(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(table, x):
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def chunked_cross_entropy(x, table, labels, chunk: int = 1024,
+                          mask: Optional[jax.Array] = None,
+                          valid_vocab: Optional[int] = None):
+    """Mean next-token CE without materializing full (b, s, V) f32 logits.
+
+    x: (b, s, d) final hidden states; table: (V, d); labels: (b, s).
+    Scans seq chunks; each chunk's logits are rematerialized in the backward
+    pass (jax.checkpoint), so live memory is O(b * chunk * V).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def chunk_loss(xc, lc, mc):
+        logits = unembed(table, xc).astype(jnp.float32)
+        if valid_vocab is not None and valid_vocab < table.shape[0]:
+            logits = jnp.where(jnp.arange(table.shape[0]) < valid_vocab,
+                               logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - ll) * mc
+        return jnp.sum(nll)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    mask_f = jnp.ones((b, s), jnp.float32) if mask is None else mask.astype(jnp.float32)
+
+    xs = x[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    ms = mask_f[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(tot, inp):
+        return tot + chunk_loss(*inp), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xs, ls, ms))
+    if rem:
+        total = total + chunk_loss(x[:, n * chunk:], labels[:, n * chunk:],
+                                   mask_f[:, n * chunk:])
+    return total / jnp.maximum(jnp.sum(mask_f), 1.0)
+
+
+def cross_entropy(logits, labels, mask: Optional[jax.Array] = None):
+    """Mean next-token cross entropy in f32. logits (..., V), labels (...,)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

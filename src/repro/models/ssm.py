@@ -1,0 +1,206 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* fixed-size chunks plus a linear recurrence *across* chunk
+states — O(S * chunk) instead of O(S^2), and a natural fit for TPU MXU
+(all heavy ops are batched matmuls).  Decode is the constant-memory
+selective-state recurrence (h <- a*h + dt*B*x) plus a rolling conv state.
+
+Head layout follows Mamba2: d_inner = expand*d_model split into H heads of
+P=head_dim channels; B and C are shared across heads (single group, like MQA);
+per-head scalar dt and A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.sharding import shard
+
+
+def ssm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    s, d = cfg.ssm, cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    n = s.d_state
+    conv_dim = di + 2 * n                       # x + B + C go through the conv
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), minval=jnp.log(1e-3),
+                                    maxval=jnp.log(1e-1)))
+    return {
+        # order: [z (di), x (di), B (n), C (n), dt (nh)]
+        "in_proj": layers.truncated_normal(ks[0], (d, 2 * di + 2 * n + nh),
+                                           d ** -0.5, dtype),
+        "conv_w": layers.truncated_normal(ks[1], (s.conv_width, conv_dim),
+                                          0.1, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": layers.rmsnorm_init(di, dtype),
+        "out_proj": layers.truncated_normal(ks[3], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    s = cfg.ssm
+    di, n = s.d_inner(cfg.d_model), s.d_state
+    nh = s.num_heads(cfg.d_model)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * n], axis=-1)
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc):
+    """Depthwise causal conv over (b, s, c)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :].astype(xbc.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-triangular decay matrix.
+
+    x: (..., q) per-step log decays -> L[..., i, j] = sum_{j<k<=i} x[k],
+    masked to -inf above the diagonal.
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan (pure jnp oracle for the Pallas kernel, and the
+    default XLA path in the model).
+
+    xh: (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      softplus'd step sizes (>0)
+    A:  (h,)           negative per-head decay rates
+    B:  (b, s, n)      input projection (single group)
+    C:  (b, s, n)      output projection
+    Returns (y: (b, s, h, p), final_state: (b, h, n, p)).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def r(t, tail):  # reshape into chunks
+        return t.reshape((b, nc, chunk) + tail)
+
+    xh_c = r(xh, (h, p)).astype(jnp.float32)
+    dt_c = r(dt, (h,)).astype(jnp.float32)
+    B_c = r(B, (n,)).astype(jnp.float32)
+    C_c = r(C, (n,)).astype(jnp.float32)
+
+    dA = dt_c * A[None, None, None, :]               # (b,nc,q,h) log decays
+    dA_cum = jnp.cumsum(dA, axis=2)                  # within-chunk cumulative
+
+    # 1) intra-chunk (diagonal block) — quadratic within chunk
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))   # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c) # (b,nc,q,k)
+    M = scores[:, :, None] * L                       # (b,nc,h,q,k)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dt_c, xh_c)
+
+    # 2) chunk end-states: decay-weighted sum of inputs
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        B_c, dt_c * decay_to_end, xh_c)     # (b,nc,h,n,p)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,nc,h)
+    init = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    (final, prev_states) = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b,nc,h,n,p) state entering chunk
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(dA_cum)                            # decay from chunk start
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", C_c, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_forward(params, cfg: ArchConfig, x, state=None):
+    """Full-sequence Mamba2 block. x: (b, s, d) -> (y, final_state)."""
+    s_cfg = cfg.ssm
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.num_heads(cfg.d_model)
+    n, p = s_cfg.d_state, s_cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(params["conv_w"], params["conv_b"], xbc)
+    xi, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xi.reshape(*xi.shape[:2], nh, p)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, final = ssd_chunked(xh, dt, A, B, C, min(s_cfg.chunk_size, x.shape[1]))
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"]), final
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    nh = s.num_heads(cfg.d_model)
+    conv_dim = s.d_inner(cfg.d_model) + 2 * s.d_state
+    return {
+        "state": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_step(params, cfg: ArchConfig, x, cache):
+    """One-token decode. x: (b, 1, d). Returns (y, new_cache)."""
+    s_cfg = cfg.ssm
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.num_heads(cfg.d_model)
+    n, p = s_cfg.d_state, s_cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # rolling conv: window = [cached (w-1), current]
+    window = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc1 = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))[:, None, :]
+    new_conv = window[:, 1:]
+
+    xi, B, C = jnp.split(xbc1, [di, di + n], axis=-1)
+    xh = xi.reshape(xi.shape[0], nh, p)                  # (b,h,p)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])                         # (b,h)
+
+    h_prev = cache["state"].astype(jnp.float32)
+    Bx = jnp.einsum("bn,bhp,bh->bhnp", B[:, 0].astype(jnp.float32), xh, dt)
+    h_new = h_prev * a[..., None, None] + Bx
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), h_new)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"state": h_new.astype(cache["state"].dtype), "conv": new_conv}

@@ -1,0 +1,410 @@
+"""Unified model zoo: dense/GQA, MoE, Mamba2-SSM, Zamba2-hybrid, VLM, Whisper.
+
+All models are pure functions over a param pytree.  Per-layer parameters are
+*stacked* along a leading ``layers`` axis and executed with ``jax.lax.scan``
+so that 30-48 layer models lower to compact HLO (critical for the 80-combo
+dry-run sweep) and per-layer remat is a single ``jax.checkpoint``.
+
+Public API:
+  init(rng, cfg, dtype)                      -> params
+  forward(params, cfg, batch, remat=...)     -> (logits, aux_losses)
+  init_cache(cfg, batch, max_len, dtype)     -> decode cache
+  decode_step(params, cfg, cache, token, pos)-> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.config import ArchConfig
+from repro.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def _stack_init(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(remat)
+
+
+# ======================================================================
+# Init
+# ======================================================================
+def _dense_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.arch_type == "moe":
+        p["moe"] = moe_lib.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _ssm_block_init(key, cfg: ArchConfig, dtype):
+    return {
+        "ln": layers.rmsnorm_init(cfg.d_model, dtype),
+        "ssm": ssm_lib.ssm_init(key, cfg, dtype),
+    }
+
+
+def _xattn_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "lnx": layers.rmsnorm_init(cfg.d_model, dtype),
+        "xattn": attn.attn_init(k2, cfg, dtype),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": layers.mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(rng, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kb, kh, kx = jax.random.split(rng, 4)
+    pv = cfg.padded_vocab_size
+    params: Params = {
+        "embed": layers.embed_init(ke, pv, cfg.d_model, dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.embed_init(kh, pv, cfg.d_model, dtype)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack_init(
+            kb, cfg.num_layers, lambda k: _dense_block_init(k, cfg, dtype))
+    elif cfg.arch_type == "ssm":
+        params["blocks"] = _stack_init(
+            kb, cfg.num_layers, lambda k: _ssm_block_init(k, cfg, dtype))
+    elif cfg.arch_type == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        kg, kr, ka = jax.random.split(kb, 3)
+        params["blocks"] = _stack_init(
+            kg, n_groups * every,
+            lambda k: _ssm_block_init(k, cfg, dtype))
+        # reshape leading axis to (groups, every)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), params["blocks"])
+        if rem:
+            params["tail_blocks"] = _stack_init(
+                kr, rem, lambda k: _ssm_block_init(k, cfg, dtype))
+        params["shared_attn"] = _dense_block_init(ka, cfg, dtype)  # one weight set
+    elif cfg.arch_type == "audio":
+        params["enc_blocks"] = _stack_init(
+            kx, cfg.encoder_layers, lambda k: _dense_block_init(k, cfg, dtype))
+        params["enc_norm"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        params["blocks"] = _stack_init(
+            kb, cfg.num_layers, lambda k: _xattn_block_init(k, cfg, dtype))
+    else:
+        raise ValueError(cfg.arch_type)
+    return params
+
+
+# ======================================================================
+# Forward (train / prefill)
+# ======================================================================
+def _dense_block(bp, cfg: ArchConfig, x, positions, aux, *, causal=True, enc=None):
+    h = attn.attention(bp["attn"], cfg, layers.rmsnorm(bp["ln1"], x, cfg.rmsnorm_eps),
+                       positions, causal=causal)
+    x = x + h
+    if enc is not None:  # whisper decoder cross-attention
+        h = attn.attention(bp["xattn"], cfg,
+                           layers.rmsnorm(bp["lnx"], x, cfg.rmsnorm_eps),
+                           positions, causal=False, kv=enc)
+        x = x + h
+    y = layers.rmsnorm(bp["ln2"], x, cfg.rmsnorm_eps)
+    if cfg.arch_type == "moe":
+        f, losses = moe_lib.moe_ffn(bp["moe"], cfg, y)
+        aux = {k: aux.get(k, 0.0) + v for k, v in losses.items()}
+    else:
+        f = layers.mlp(bp["mlp"], y)
+    return x + f, aux
+
+
+def _ssm_block(bp, cfg: ArchConfig, x):
+    h, _ = ssm_lib.ssm_forward(bp["ssm"], cfg,
+                               layers.rmsnorm(bp["ln"], x, cfg.rmsnorm_eps))
+    return x + h
+
+
+def _run_dense_stack(blocks, cfg, x, positions, remat, causal=True, enc=None):
+    aux0 = {"moe_aux": jnp.float32(0), "moe_z": jnp.float32(0)} \
+        if cfg.arch_type == "moe" else {}
+
+    def body(carry, bp):
+        x, aux = carry
+        x, aux = _dense_block(bp, cfg, x, positions, aux, causal=causal, enc=enc)
+        # sequence-parallel residual stream between blocks (Megatron SP):
+        # the remat-scan carry is then 1/model_parallel the size.
+        x = shard(x, "batch", "act_seq", "d_model")
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(body, remat), (x, aux0), blocks)
+    return x, aux
+
+
+def forward_features(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                     *, remat: str = "full"):
+    """batch: {"tokens": (b, s)} (+ "vision": (b, V, d) | "frames": (b, F, d)).
+
+    Returns (final hidden states at text positions, aux loss dict).
+    """
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens)
+    if cfg.arch_type == "vlm":
+        vision = batch["vision"].astype(x.dtype)       # projected patch embeds
+        x = jnp.concatenate([vision, x], axis=1)
+    x = shard(x, "batch", "seq", "d_model")
+    seq = x.shape[1]
+    positions = jnp.arange(seq)
+    aux: Dict[str, jax.Array] = {}
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        x, aux = _run_dense_stack(params["blocks"], cfg, x, positions, remat)
+
+    elif cfg.arch_type == "ssm":
+        def body(x, bp):
+            return shard(_ssm_block(bp, cfg, x), "batch", "act_seq", "d_model"), None
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, gp):
+            def inner(x, bp):
+                return shard(_ssm_block(bp, cfg, x), "batch", "act_seq", "d_model"), None
+            x, _ = jax.lax.scan(inner, x, gp)
+            x, _ = _dense_block(shared, cfg, x, positions, {})
+            x = shard(x, "batch", "act_seq", "d_model")
+            return x, None
+
+        x, _ = jax.lax.scan(_maybe_remat(group_body, remat), x, params["blocks"])
+        if "tail_blocks" in params:
+            def body(x, bp):
+                return _ssm_block(bp, cfg, x), None
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["tail_blocks"])
+
+    elif cfg.arch_type == "audio":
+        frames = batch["frames"].astype(x.dtype)
+        enc = frames + layers.sinusoid_positions(frames.shape[1], cfg.d_model
+                                                 ).astype(x.dtype)[None]
+        enc_pos = jnp.arange(enc.shape[1])
+        enc, _ = _run_dense_stack(params["enc_blocks"], cfg, enc, enc_pos,
+                                  remat, causal=False)
+        enc = layers.rmsnorm(params["enc_norm"], enc, cfg.rmsnorm_eps)
+        x = x + layers.sinusoid_positions(seq, cfg.d_model).astype(x.dtype)[None]
+
+        def body(carry, bp):
+            x, aux = carry
+            # per-layer cross K/V from encoder output
+            k = jnp.einsum("bsd,dhk->bshk", enc, bp["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc, bp["xattn"]["wv"])
+            x, aux = _dense_block(bp, cfg, x, positions, aux, causal=True,
+                                  enc=(k, v))
+            return (x, aux), None
+
+        (x, _), _ = jax.lax.scan(_maybe_remat(body, remat), (x, {}), params["blocks"])
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    if cfg.arch_type == "vlm":                         # only text positions score
+        x = x[:, batch["vision"].shape[1]:]
+    return x, aux
+
+
+def unembed_table(params: Params, cfg: ArchConfig):
+    return params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["table"]
+
+
+def mask_pad_logits(logits, cfg: ArchConfig):
+    """Vocab-pad entries get -inf so softmax/argmax ignore them."""
+    if cfg.padded_vocab_size == cfg.vocab_size:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab_size) < cfg.vocab_size
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, remat: str = "full"):
+    """Full logits over all (text) positions: (b, s, padded_V)."""
+    x, aux = forward_features(params, cfg, batch, remat=remat)
+    logits = layers.unembed(unembed_table(params, cfg), x)
+    logits = mask_pad_logits(logits, cfg)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ======================================================================
+# Decode
+# ======================================================================
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               layout: str = "stacked"):
+    """Per-layer decode caches.
+
+    ``layout="stacked"``: leading layers axis, decode scans over layers
+    (compact HLO — CPU smoke tests).
+    ``layout="list"``: a list of per-layer caches, decode unrolls — every
+    cache buffer is updated in place with donation aliasing and no loop-state
+    copies (production serving layout).  Dense-family archs only.
+    """
+    def stack(n, make):
+        one = make()
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        if layout == "list":
+            return {"kv_list": [attn.init_kv_cache(cfg, batch, max_len, dtype)
+                                for _ in range(cfg.num_layers)]}
+        return {"kv": stack(cfg.num_layers,
+                            lambda: attn.init_kv_cache(cfg, batch, max_len, dtype))}
+    if cfg.arch_type == "ssm":
+        return {"ssm": stack(cfg.num_layers,
+                             lambda: ssm_lib.init_ssm_cache(cfg, batch))}
+    if cfg.arch_type == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        c = {
+            "ssm": stack(n_groups * every, lambda: ssm_lib.init_ssm_cache(cfg, batch)),
+            "attn_kv": stack(n_groups,
+                             lambda: attn.init_kv_cache(cfg, batch, max_len, dtype)),
+        }
+        c["ssm"] = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), c["ssm"])
+        if rem:
+            c["tail_ssm"] = stack(rem, lambda: ssm_lib.init_ssm_cache(cfg, batch))
+        return c
+    if cfg.arch_type == "audio":
+        return {
+            "kv": stack(cfg.num_layers,
+                        lambda: attn.init_kv_cache(cfg, batch, max_len, dtype)),
+            # precomputed cross K/V per decoder layer (filled at prefill)
+            "cross_k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                  cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    raise ValueError(cfg.arch_type)
+
+
+def _decode_dense_block(bp, cfg, x, kv_cache, pos, cross_kv=None):
+    h, kv_cache = attn.decode_attention(
+        bp["attn"], cfg, layers.rmsnorm(bp["ln1"], x, cfg.rmsnorm_eps),
+        kv_cache, pos)
+    x = x + h
+    if cross_kv is not None:
+        h, _ = attn.decode_attention(
+            bp["xattn"], cfg, layers.rmsnorm(bp["lnx"], x, cfg.rmsnorm_eps),
+            None, pos, cross_kv=cross_kv)
+        x = x + h
+    y = layers.rmsnorm(bp["ln2"], x, cfg.rmsnorm_eps)
+    if cfg.arch_type == "moe":
+        f, _ = moe_lib.moe_ffn(bp["moe"], cfg, y)
+    else:
+        f = layers.mlp(bp["mlp"], y)
+    return x + f, kv_cache
+
+
+def _decode_ssm_block(bp, cfg, x, cache):
+    h, cache = ssm_lib.ssm_step(bp["ssm"], cfg,
+                                layers.rmsnorm(bp["ln"], x, cfg.rmsnorm_eps), cache)
+    return x + h, cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, token, pos):
+    """token: (b, 1) int32; pos: scalar int32. Returns (logits (b, V), cache)."""
+    x = layers.embed(params["embed"], token)
+    x = shard(x, "batch", None, "d_model")
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        if "kv_list" in cache:      # unrolled serving layout
+            new_list = []
+            for i, kv in enumerate(cache["kv_list"]):
+                bp = jax.tree.map(lambda p: p[i], params["blocks"])
+                x, kv = _decode_dense_block(bp, cfg, x, kv, pos)
+                new_list.append(kv)
+            new_cache = {"kv_list": new_list}
+        else:
+            def body(x, layer_in):
+                bp, kv = layer_in
+                x, kv = _decode_dense_block(bp, cfg, x, kv, pos)
+                return x, kv
+            x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+            new_cache = {"kv": new_kv}
+
+    elif cfg.arch_type == "ssm":
+        def body(x, layer_in):
+            bp, c = layer_in
+            x, c = _decode_ssm_block(bp, cfg, x, c)
+            return x, c
+        x, new_c = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_c}
+
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, layer_in):
+            gp, gc, kv = layer_in
+
+            def inner(x, li):
+                bp, c = li
+                x, c = _decode_ssm_block(bp, cfg, x, c)
+                return x, c
+            x, gc = jax.lax.scan(inner, x, (gp, gc))
+            x, kv = _decode_dense_block(shared, cfg, x, kv, pos)
+            return x, (gc, kv)
+
+        x, (new_ssm, new_kv) = jax.lax.scan(
+            group, x, (params["blocks"], cache["ssm"], cache["attn_kv"]))
+        new_cache = {"ssm": new_ssm, "attn_kv": new_kv}
+        if "tail_blocks" in params:
+            def body(x, li):
+                bp, c = li
+                x, c = _decode_ssm_block(bp, cfg, x, c)
+                return x, c
+            x, new_tail = jax.lax.scan(body, x, (params["tail_blocks"],
+                                                 cache["tail_ssm"]))
+            new_cache["tail_ssm"] = new_tail
+
+    elif cfg.arch_type == "audio":
+        # sinusoid positional embedding at position `pos`
+        dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)
+        angle = pos.astype(jnp.float32) / jnp.power(10000.0, dim / cfg.d_model)
+        pe = jnp.zeros((cfg.d_model,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(angle)).at[1::2].set(jnp.cos(angle))
+        x = x + pe.astype(x.dtype)[None, None, :]
+
+        def body(x, layer_in):
+            bp, kv, ck, cv = layer_in
+            x, kv = _decode_dense_block(bp, cfg, x, kv, pos, cross_kv=(ck, cv))
+            return x, kv
+        x, new_kv = jax.lax.scan(
+            body, x, (params["blocks"], cache["kv"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, kv=new_kv)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = layers.unembed(unembed_table(params, cfg), x)[:, 0]
+    logits = mask_pad_logits(logits, cfg)
+    return shard(logits, "batch", "vocab"), new_cache

@@ -1,0 +1,5 @@
+from repro.networks.mlp import mlp_init, mlp_apply, MLP  # noqa: F401
+from repro.networks.lstm import lstm_init, lstm_apply, lstm_initial_state, LSTMNetwork  # noqa: F401
+from repro.networks.heads import (  # noqa: F401
+    dueling_init, dueling_apply, categorical_init, categorical_apply,
+    gaussian_policy_init, gaussian_policy_apply, CategoricalParams)

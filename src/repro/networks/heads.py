@@ -1,0 +1,74 @@
+"""Agent heads: dueling Q (Wang et al. 2015), C51 categorical critic
+(Bellemare et al. 2017), and tanh-Gaussian policies for continuous control."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.networks.mlp import mlp_apply, mlp_init
+
+
+# ------------------------------------------------------------- dueling
+def dueling_init(key, in_dim: int, hidden: int, num_actions: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "value": mlp_init(k1, (in_dim, hidden, 1)),
+        "advantage": mlp_init(k2, (in_dim, hidden, num_actions)),
+    }
+
+
+def dueling_apply(params, h):
+    v = mlp_apply(params["value"], h)
+    a = mlp_apply(params["advantage"], h)
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+
+# ------------------------------------------------------------- C51
+class CategoricalParams(NamedTuple):
+    logits: jax.Array     # (..., num_atoms)
+    atoms: jax.Array      # (num_atoms,)
+
+    def mean(self) -> jax.Array:
+        probs = jax.nn.softmax(self.logits, axis=-1)
+        return jnp.sum(probs * self.atoms, axis=-1)
+
+
+def categorical_init(key, in_dim: int, num_atoms: int = 51):
+    return {"head": mlp_init(key, (in_dim, num_atoms))}
+
+
+def categorical_apply(params, h, vmin: float, vmax: float,
+                      num_atoms: int = 51) -> CategoricalParams:
+    logits = mlp_apply(params["head"], h)
+    atoms = jnp.linspace(vmin, vmax, num_atoms)
+    return CategoricalParams(logits, atoms)
+
+
+def l2_project(z_p, p, z_q):
+    """Project distribution (z_p, p) onto support z_q (C51 projection Π)."""
+    vmin, vmax = z_q[0], z_q[-1]
+    d_pos = jnp.concatenate([z_q[1:], z_q[-1:]], 0) - z_q
+    d_neg = z_q - jnp.concatenate([z_q[:1], z_q[:-1]], 0)
+    z_p = jnp.clip(z_p, vmin, vmax)[..., None, :]      # (..., 1, n_p)
+    z_q_ = z_q[..., :, None]                           # (n_q, 1)
+    d_pos = jnp.where(d_pos == 0, 1.0, d_pos)[..., :, None]
+    d_neg = jnp.where(d_neg == 0, 1.0, d_neg)[..., :, None]
+    delta = z_p - z_q_                                 # (..., n_q, n_p)
+    d_sign = (delta >= 0.0)
+    delta_hat = jnp.where(d_sign, delta / d_pos, -delta / d_neg)
+    p = p[..., None, :]
+    return jnp.sum(jnp.clip(1.0 - delta_hat, 0.0, 1.0) * p, axis=-1)
+
+
+# ------------------------------------------------------------- gaussian policy
+def gaussian_policy_init(key, in_dim: int, hidden: int, action_dim: int):
+    return {"net": mlp_init(key, (in_dim, hidden, 2 * action_dim))}
+
+
+def gaussian_policy_apply(params, h, min_scale: float = 1e-3):
+    out = mlp_apply(params["net"], h)
+    mean, raw_scale = jnp.split(out, 2, axis=-1)
+    scale = jax.nn.softplus(raw_scale) + min_scale
+    return mean, scale

@@ -1,0 +1,82 @@
+"""LSTM core for recurrent agents (R2D2, §3.2)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array
+    c: jax.Array
+
+
+def lstm_init(key, in_dim: int, hidden: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    scale_i = in_dim ** -0.5
+    scale_h = hidden ** -0.5
+    return {
+        "wi": (scale_i * jax.random.truncated_normal(
+            k1, -2, 2, (in_dim, 4 * hidden))).astype(dtype),
+        "wh": (scale_h * jax.random.truncated_normal(
+            k2, -2, 2, (hidden, 4 * hidden))).astype(dtype),
+        "b": jnp.zeros((4 * hidden,), dtype),
+    }
+
+
+def lstm_initial_state(hidden: int, batch: int = 1) -> LSTMState:
+    return LSTMState(jnp.zeros((batch, hidden)), jnp.zeros((batch, hidden)))
+
+
+def lstm_apply(params, x, state: LSTMState):
+    """x: (batch, in_dim) one step. Returns (out, new_state)."""
+    gates = x @ params["wi"] + state.h @ params["wh"] + params["b"]
+    i, g, f, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * state.c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, LSTMState(h, c)
+
+
+def lstm_unroll(params, xs, state: LSTMState):
+    """xs: (T, batch, in_dim). Returns (outs (T, batch, H), final_state)."""
+    def body(s, x):
+        h, s = lstm_apply(params, x, s)
+        return s, h
+    final, outs = jax.lax.scan(body, state, xs)
+    return outs, final
+
+
+class LSTMNetwork:
+    """MLP torso -> LSTM core -> linear head, for R2D2-style agents."""
+
+    def __init__(self, torso_sizes: Sequence[int], hidden: int, out_dim: int):
+        self.torso_sizes = tuple(torso_sizes)
+        self.hidden = hidden
+        self.out_dim = out_dim
+
+    def init(self, key, in_dim: int):
+        from repro.networks.mlp import mlp_init
+        k1, k2, k3 = jax.random.split(key, 3)
+        torso_in = (in_dim,) + self.torso_sizes
+        return {
+            "torso": mlp_init(k1, torso_in),
+            "lstm": lstm_init(k2, self.torso_sizes[-1], self.hidden),
+            "head": mlp_init(k3, (self.hidden, self.out_dim)),
+        }
+
+    def initial_state(self, batch: int = 1) -> LSTMState:
+        return lstm_initial_state(self.hidden, batch)
+
+    def apply(self, params, obs, state: LSTMState):
+        from repro.networks.mlp import mlp_apply
+        h = mlp_apply(params["torso"], obs, activate_final=True)
+        h, state = lstm_apply(params["lstm"], h, state)
+        return mlp_apply(params["head"], h), state
+
+    def unroll(self, params, obs_seq, state: LSTMState):
+        """obs_seq: (T, batch, feat)."""
+        from repro.networks.mlp import mlp_apply
+        h = mlp_apply(params["torso"], obs_seq, activate_final=True)
+        outs, final = lstm_unroll(params["lstm"], h, state)
+        return mlp_apply(params["head"], outs), final

@@ -1,0 +1,49 @@
+"""Small MLP torsos for the classic-control agents (pure init/apply fns).
+
+Convention: ``mlp_apply(params, x)`` expects ``x`` of shape (batch, features).
+Agents flatten observations with :func:`flatten_obs` (spec-aware), so actors
+can pass single unbatched observations and learners batched ones.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_obs(obs, spec_shape) -> jax.Array:
+    """(..., *spec_shape) -> (batch, prod(spec_shape)); adds batch dim if absent."""
+    obs = jnp.asarray(obs, jnp.float32)
+    feat = int(np.prod(spec_shape)) if spec_shape else 1
+    flat = obs.reshape(-1, feat) if obs.size != feat else obs.reshape(1, feat)
+    return flat
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    params = []
+    for m, n in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.truncated_normal(sub, -2, 2, (m, n)) * (m ** -0.5)
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((n,), dtype)})
+    return params
+
+
+def mlp_apply(params, x, activate_final: bool = False):
+    h = jnp.asarray(x, jnp.float32)
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1 or activate_final:
+            h = jax.nn.relu(h)
+    return h
+
+
+class MLP:
+    def __init__(self, layer_sizes: Sequence[int]):
+        self.layer_sizes = tuple(layer_sizes)
+
+    def init(self, key, in_dim: int):
+        return mlp_init(key, (in_dim,) + self.layer_sizes)
+
+    apply = staticmethod(mlp_apply)

@@ -1,0 +1,144 @@
+"""Minimal optax-style optimizers (no optax in the container).
+
+An :class:`Optimizer` is a pair of pure functions ``init(params) -> state``
+and ``update(grads, state, params) -> (updates, state)``; ``apply_updates``
+adds updates to params.  Includes Adam(W), SGD+momentum, global-norm
+clipping, LR schedules, and the paper's target-network update helpers
+(periodic copy for DQN-family, EMA for MPO-family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def _to_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: Union[float, Schedule], b1=0.9, b2=0.999, eps=1e-8,
+         weight_decay: float = 0.0, clip: Optional[float] = None) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamState, params=None):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step), nu)
+        lr_t = sched(step)
+        updates = jax.tree.map(
+            lambda m, v: -lr_t * m / (jnp.sqrt(v) + eps), mu_hat, nu_hat)
+        if weight_decay and params is not None:
+            updates = jax.tree.map(
+                lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+                updates, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+class SgdState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(lr: Union[float, Schedule], momentum: float = 0.0,
+        clip: Optional[float] = None) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return SgdState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state: SgdState, params=None):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+        lr_t = sched(step)
+        return jax.tree.map(lambda m: -lr_t * m, mom), SgdState(step, mom)
+
+    return Optimizer(init, update)
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Prepend global-norm clipping to any optimizer."""
+    def update(grads, state, params=None):
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+    return Optimizer(opt.init, update)
+
+
+def linear_warmup(base: float, warmup_steps: int) -> Schedule:
+    def sched(step):
+        return base * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    return sched
+
+
+def cosine_schedule(base: float, total_steps: int, warmup_steps: int = 0,
+                    final_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base * jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+# ------------------------------------------------------- target networks
+def periodic_update(online, target, step, period: int):
+    """DQN-style: copy online -> target every ``period`` steps."""
+    copy = (step % period) == 0
+    return jax.tree.map(lambda o, t: jnp.where(copy, o, t), online, target)
+
+
+def incremental_update(online, target, tau: float):
+    """EMA target (MPO/DDPG-style soft update)."""
+    return jax.tree.map(lambda o, t: tau * o + (1 - tau) * t, online, target)

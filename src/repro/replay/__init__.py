@@ -1,0 +1,4 @@
+from repro.replay.dataset import ReplaySample, SampleInfo, as_iterator, dataset_from_list  # noqa: F401
+from repro.replay.rate_limiter import MinSize, RateLimiter, RateLimiterTimeout, SampleToInsertRatio  # noqa: F401
+from repro.replay.selectors import Fifo, Lifo, Prioritized, Uniform  # noqa: F401
+from repro.replay.table import Table  # noqa: F401

@@ -1,0 +1,52 @@
+"""Dataset iterators over replay tables (the learner-facing stream, §2.3).
+
+``as_iterator`` yields batched pytrees (numpy, stacked along axis 0) exactly
+like Acme's TF-Dataset-over-Reverb, including the sampled keys and
+probabilities needed for prioritized replay importance weighting.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, NamedTuple
+
+import numpy as np
+
+from repro.replay.table import Table
+
+
+class SampleInfo(NamedTuple):
+    keys: np.ndarray
+    probabilities: np.ndarray
+
+
+class ReplaySample(NamedTuple):
+    info: SampleInfo
+    data: Any
+
+
+def _stack(items):
+    import jax
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *items)
+
+
+def as_iterator(table: Table, batch_size: int,
+                timeout: float = None) -> Iterator[ReplaySample]:
+    while True:
+        sampled = table.sample(batch_size, timeout=timeout)
+        items = [it.data for it, _ in sampled]
+        keys = np.array([it.key for it, _ in sampled], np.int64)
+        probs = np.array([p for _, p in sampled], np.float64)
+        yield ReplaySample(SampleInfo(keys, probs), _stack(items))
+
+
+def dataset_from_list(items, batch_size: int, *, seed: int = 0,
+                      shuffle: bool = True) -> Iterator[ReplaySample]:
+    """Offline dataset (§2.6/§3.7): iterate a fixed list of items forever."""
+    rng = np.random.RandomState(seed)
+    n = len(items)
+    while True:
+        idx = rng.randint(0, n, size=batch_size) if shuffle \
+            else np.arange(batch_size) % n
+        batch = [items[i] for i in idx]
+        info = SampleInfo(np.asarray(idx, np.int64),
+                          np.full(batch_size, 1.0 / n))
+        yield ReplaySample(info, _stack(batch))

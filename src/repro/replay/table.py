@@ -1,0 +1,88 @@
+"""Reverb-lite: an in-process, thread-safe replay table.
+
+Items are arbitrary pytrees of numpy arrays (inserted by adders).  Selectors
+implement Reverb's sampling distributions: Fifo, Lifo, Uniform, Prioritized.
+Removal on overflow is FIFO.  The table enforces its RateLimiter on both
+insert and sample paths, reproducing §2.5's blocking behaviour.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.replay.rate_limiter import RateLimiter, MinSize
+from repro.replay.selectors import Selector, Uniform
+
+
+class Item:
+    __slots__ = ("key", "data", "priority")
+
+    def __init__(self, key: int, data: Any, priority: float):
+        self.key = key
+        self.data = data
+        self.priority = priority
+
+
+class Table:
+    def __init__(self, name: str, capacity: int,
+                 selector: Optional[Selector] = None,
+                 rate_limiter: Optional[RateLimiter] = None):
+        self.name = name
+        self.capacity = int(capacity)
+        self.selector = selector or Uniform()
+        self.rate_limiter = rate_limiter or MinSize(1)
+        self._lock = threading.Lock()
+        self._items: Dict[int, Item] = {}
+        self._order: List[int] = []          # insertion order for FIFO removal
+        self._next_key = 0
+
+    # ------------------------------------------------------------ insert
+    def insert(self, data: Any, priority: float = 1.0,
+               timeout: Optional[float] = None) -> int:
+        self.rate_limiter.await_can_insert(timeout)
+        with self._lock:
+            key = self._next_key
+            self._next_key += 1
+            self._items[key] = Item(key, data, priority)
+            self._order.append(key)
+            self.selector.insert(key, priority)
+            while len(self._order) > self.capacity:
+                evict = self._order.pop(0)
+                self._items.pop(evict, None)
+                self.selector.remove(evict)
+            return key
+
+    # ------------------------------------------------------------ sample
+    def sample(self, batch_size: int = 1,
+               timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
+        """Returns [(item, importance_weight_probability), ...]."""
+        out = []
+        for _ in range(batch_size):
+            self.rate_limiter.await_can_sample(timeout)
+            with self._lock:
+                key, prob = self.selector.sample()
+                item = self._items[key]
+                out.append((item, prob))
+                if getattr(self.selector, "consumes", False):
+                    self._items.pop(key, None)
+                    try:
+                        self._order.remove(key)
+                    except ValueError:
+                        pass
+        return out
+
+    def update_priorities(self, keys: Sequence[int], priorities: Sequence[float]):
+        with self._lock:
+            for k, p in zip(keys, priorities):
+                if k in self._items:
+                    self._items[k].priority = float(p)
+                    self.selector.update(k, float(p))
+
+    def size(self) -> int:
+        with self._lock:
+            return len(self._order)
+
+    def stop(self):
+        self.rate_limiter.stop()

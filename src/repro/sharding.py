@@ -1,0 +1,153 @@
+"""Logical-axis sharding: rules mapping logical axes -> mesh axes.
+
+Models annotate activations with *logical* axes (``'batch'``, ``'seq'``,
+``'heads'``, ...).  A :class:`ShardingRules` context installed by the launcher
+resolves those to physical mesh axes and applies
+``jax.lax.with_sharding_constraint``.  Outside any context (CPU smoke tests)
+annotations are no-ops, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Baseline (paper-faithful + megatron tensor sharding) logical rules.
+# 'data' carries the batch; 'model' carries heads / ff / experts / vocab.
+BASE_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    # residual-stream activations: Megatron-style sequence parallelism —
+    # between blocks activations are sharded along seq on the model axis
+    # (XLA inserts the all-gather/reduce-scatter pairs around attention/mlp).
+    "act_seq": "model",
+    # q_seq: sequence-parallel attention — used when num_heads doesn't divide
+    # the model axis (attention would otherwise replicate); shards the query
+    # positions instead of heads, with no extra collectives beyond the K/V
+    # gather.
+    "q_seq": None,
+    "seq": None,
+    "kv_seq": None,
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    # experts first (expert parallelism when E divides the axis); otherwise
+    # axis-dedup falls through to tensor-parallel expert ffn (expert_ff).
+    "experts": "model",
+    "expert_ff": "model",
+    # MoE token groups follow the batch axes only: the expert-ffn einsum
+    # needs g off the model axis (expert_ff lives there), and g-resharding
+    # finer->coarser trips the partitioner's replicate-then-repartition
+    # fallback (88GB buffers).  Keeping g@(pod,data) end-to-end avoids it.
+    "moe_groups": ("pod", "data"),
+    "vocab": "model",
+    "embed_d": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,
+    "conv": None,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+        self.mesh = mesh
+        self.rules = dict(BASE_RULES)
+        if rules:
+            self.rules.update(rules)
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def mesh_axes(self, logical: Tuple[Optional[str], ...], dims=None) -> P:
+        """Resolve logical axes to a PartitionSpec, dropping mesh axes that
+        don't exist on this mesh, don't divide the dimension, or were already
+        consumed by an earlier dim (a mesh axis may appear only once)."""
+        out = []
+        used = set()
+        for i, name in enumerate(logical):
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a in self._axis_sizes and a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            if dims is not None:
+                kept = []
+                prod = 1
+                for a in axes:
+                    if dims[i] % (prod * self._axis_sizes[a]) == 0:
+                        kept.append(a)
+                        prod *= self._axis_sizes[a]
+                axes = tuple(kept)
+                if not axes:
+                    out.append(None)
+                    continue
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    def zero_spec(self, spec: P, dims) -> P:
+        """ZeRO-style: additionally shard the first free, divisible dim over
+        the data(+pod) axes — used for optimizer states (ZeRO-1)."""
+        used = set()
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                used.add(a)
+        candidates = [a for a in ("data", "pod") if a in self._axis_sizes
+                      and a not in used]
+        if not candidates:
+            return spec
+        out = list(spec) + [None] * (len(dims) - len(spec))
+        for i, d in enumerate(dims):
+            if out[i] is not None:
+                continue
+            kept = []
+            prod = 1
+            for a in candidates:
+                if d % (prod * self._axis_sizes[a]) == 0:
+                    kept.append(a)
+                    prod *= self._axis_sizes[a]
+            if kept:
+                out[i] = tuple(kept) if len(kept) > 1 else kept[0]
+                break
+        return P(*out)
+
+    def named_sharding(self, logical, dims=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.mesh_axes(logical, dims))
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (no-op outside a context)."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = r.mesh_axes(tuple(logical), dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

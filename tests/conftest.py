@@ -1,0 +1,19 @@
+"""Suite-wide guards: a per-test watchdog (dumps all thread stacks and
+aborts if any single test exceeds WATCHDOG_S — learning tests are slow on
+one CPU core, but nothing should exceed this) and small hypothesis budgets.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device; the
+dry-run subprocess test sets its own 512-device env.
+"""
+import faulthandler
+
+import pytest
+
+WATCHDOG_S = 900
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    faulthandler.dump_traceback_later(WATCHDOG_S, exit=True)
+    yield
+    faulthandler.cancel_dump_traceback_later()

@@ -1,0 +1,100 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.adders import EpisodeAdder, NStepTransitionAdder, SequenceAdder
+from repro.core import types
+from repro.replay import MinSize, Table, Uniform
+
+
+def _drain(table):
+    return [table._items[k].data for k in table._order]
+
+
+def _run_episode(adder, rewards, discounts=None, obs0=0):
+    discounts = discounts or [1.0] * len(rewards)
+    adder.add_first(types.restart(np.float32(obs0)))
+    for i, (r, d) in enumerate(zip(rewards, discounts)):
+        last = i == len(rewards) - 1
+        ts = (types.termination(r, np.float32(obs0 + i + 1)) if last
+              else types.transition(r, np.float32(obs0 + i + 1), d))
+        adder.add(np.int32(i % 3), ts)
+
+
+def test_nstep_adder_writes_all_transitions():
+    t = Table("t", 1000, Uniform(0), MinSize(1))
+    adder = NStepTransitionAdder(t, n_step=3, discount=0.9)
+    _run_episode(adder, [1.0, 2.0, 3.0, 4.0, 5.0])
+    items = _drain(t)
+    assert len(items) == 5           # one per source step (flushed at end)
+    first = items[0]
+    # r = r0 + g*r1 + g^2*r2
+    assert first.reward == pytest.approx(1 + 0.9 * 2 + 0.81 * 3)
+    assert first.discount == pytest.approx(0.9 ** 3)
+    assert float(first.observation) == 0.0
+    assert float(first.next_observation) == 3.0
+    # tail transitions shrink towards the terminal
+    last = items[-1]
+    assert last.reward == pytest.approx(5.0)
+    assert last.discount == pytest.approx(0.0)  # terminal discount folds in
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rewards=st.lists(st.floats(-5, 5), min_size=1, max_size=12),
+    n=st.integers(1, 5),
+    gamma=st.floats(0.5, 1.0),
+)
+def test_nstep_adder_matches_oracle(rewards, n, gamma):
+    """Property: every written item equals the direct n-step aggregate."""
+    t = Table("t", 10_000, Uniform(0), MinSize(1))
+    adder = NStepTransitionAdder(t, n_step=n, discount=gamma)
+    _run_episode(adder, rewards)
+    items = _drain(t)
+    T = len(rewards)
+    assert len(items) == T
+    discounts = [1.0] * (T - 1) + [0.0]
+    for s, item in enumerate(items):
+        horizon = min(n, T - s)
+        r, g = 0.0, 1.0
+        for i in range(horizon):
+            r += g * rewards[s + i]
+            g *= gamma * discounts[s + i]
+        assert float(item.reward) == pytest.approx(r, rel=1e-5, abs=1e-5)
+        assert float(item.discount) == pytest.approx(g, rel=1e-5, abs=1e-6)
+        assert float(item.observation) == s
+        assert float(item.next_observation) == min(s + horizon, T)
+
+
+def test_sequence_adder_overlap_and_padding():
+    t = Table("t", 1000, Uniform(0), MinSize(1))
+    adder = SequenceAdder(t, sequence_length=4, period=2)
+    _run_episode(adder, [1.0] * 7)
+    items = _drain(t)
+    # writes at t=4 (steps 0-3), t=6 (steps 2-5), then flush (steps 4-6 padded)
+    assert len(items) == 3
+    assert items[0]["mask"].sum() == 4
+    assert items[1]["observation"][0] == 2.0
+    assert items[2]["mask"].sum() == 3          # padded final sequence
+    assert items[2]["mask"].shape[0] == 4
+
+
+def test_sequence_adder_extras_are_stored():
+    t = Table("t", 1000, Uniform(0), MinSize(1))
+    adder = SequenceAdder(t, sequence_length=2, period=2)
+    adder.add_first(types.restart(np.float32(0)))
+    adder.add(0, types.transition(1.0, np.float32(1)),
+              extras={"logits": np.array([0.5, 0.5], np.float32)})
+    adder.add(1, types.termination(1.0, np.float32(2)),
+              extras={"logits": np.array([0.2, 0.8], np.float32)})
+    items = _drain(t)
+    assert items[0]["logits"].shape == (2, 2)
+
+
+def test_episode_adder_whole_episode():
+    t = Table("t", 1000, Uniform(0), MinSize(1))
+    adder = EpisodeAdder(t)
+    _run_episode(adder, [1.0, 0.0, 2.0])
+    items = _drain(t)
+    assert len(items) == 1
+    assert items[0]["reward"].tolist() == [1.0, 0.0, 2.0]

@@ -1,0 +1,41 @@
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(x=1.0):
+    return {"params": {"w": jnp.full((3, 3), x)}, "step": jnp.asarray(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state(2.5)
+    ck.save(state, step=10, metadata={"walltime": 12.5})
+    restored, meta = ck.restore(_state(0.0))
+    assert meta["step"] == 10
+    assert meta["walltime"] == 12.5
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 2.5)
+
+
+def test_keep_limit_garbage_collects(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save(_state(step), step=step)
+    assert ck.list_steps() == [3, 4]
+
+
+def test_restore_empty_returns_none(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state, meta = ck.restore(_state())
+    assert state is None and meta is None
+
+
+def test_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(_state(1.0), step=1)
+    ck.save(_state(2.0), step=2)
+    restored, meta = ck.restore(_state(), step=1)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 1.0)

@@ -1,0 +1,81 @@
+"""Launchpad-lite: program graph construction, handle transparency, and the
+actor/learner/replay triangle under the rate limiter."""
+import threading
+import time
+
+import pytest
+
+from repro.distributed.program import Handle, LocalLauncher, Program
+
+
+class Source:
+    def __init__(self, value=41):
+        self.value = value
+
+    def get(self):
+        return self.value
+
+
+class Consumer:
+    def __init__(self, source):
+        # the key Launchpad property: source may be a Handle or the object;
+        # the code below cannot tell the difference.
+        self.source = source
+        self.result = None
+
+    def run(self):
+        self.result = self.source.get() + 1
+
+
+def test_program_edges_look_like_method_calls():
+    prog = Program()
+    src = prog.add_node("source", Source, 41)
+    prog.add_node("consumer", Consumer, src, is_worker=True)
+    launcher = LocalLauncher(prog).launch()
+    launcher.join(timeout=5)
+    assert prog.resolve("consumer").result == 42
+
+
+def test_duplicate_node_rejected():
+    prog = Program()
+    prog.add_node("a", Source)
+    with pytest.raises(ValueError):
+        prog.add_node("a", Source)
+
+
+def test_handle_dereference_is_lazy_and_cached():
+    prog = Program()
+    calls = []
+
+    def factory():
+        calls.append(1)
+        return Source(1)
+
+    h = prog.add_node("s", factory)
+    assert not calls
+    assert h.get() == 1
+    assert h.get() == 1
+    assert len(calls) == 1
+
+
+def test_worker_stop():
+    class Loop:
+        def __init__(self):
+            self._stop = threading.Event()
+            self.iterations = 0
+
+        def run(self):
+            while not self._stop.is_set():
+                self.iterations += 1
+                time.sleep(0.01)
+
+        def stop(self):
+            self._stop.set()
+
+    prog = Program()
+    prog.add_node("loop", Loop, is_worker=True)
+    launcher = LocalLauncher(prog).launch()
+    time.sleep(0.2)
+    launcher.stop()
+    launcher.join(timeout=5)
+    assert prog.resolve("loop").iterations > 0

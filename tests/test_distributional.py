@@ -1,0 +1,43 @@
+"""C51 categorical machinery (D4PG/DMPO critics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.networks.heads import l2_project
+
+
+def test_l2_project_identity():
+    z = jnp.linspace(0, 10, 11)
+    p = jnp.zeros(11).at[3].set(1.0)
+    out = l2_project(z, p, z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(p), atol=1e-6)
+
+
+def test_l2_project_splits_mass_between_neighbours():
+    z_q = jnp.linspace(0.0, 10.0, 11)          # spacing 1
+    z_p = jnp.array([2.5])
+    p = jnp.array([1.0])
+    out = np.asarray(l2_project(z_p, p, z_q))
+    assert out[2] == pytest.approx(0.5)
+    assert out[3] == pytest.approx(0.5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    shift=st.floats(-20, 20),
+    scale=st.floats(0.1, 2.0),
+)
+def test_l2_project_preserves_probability_mass(shift, scale):
+    z_q = jnp.linspace(-10.0, 10.0, 21)
+    src = jnp.linspace(-5.0, 5.0, 11) * scale + shift
+    p = jnp.ones(11) / 11.0
+    out = np.asarray(l2_project(src, p, z_q))
+    assert out.sum() == pytest.approx(1.0, abs=1e-5)
+    assert (out >= -1e-7).all()
+
+
+def test_l2_project_clips_out_of_support_mass_to_edges():
+    z_q = jnp.linspace(0.0, 1.0, 5)
+    out = np.asarray(l2_project(jnp.array([99.0]), jnp.array([1.0]), z_q))
+    assert out[-1] == pytest.approx(1.0)

@@ -1,0 +1,29 @@
+"""Dry-run smoke: one fast (arch x shape) combo lowers + compiles on the
+256-chip production mesh.  Runs in a SUBPROCESS because the 512-device
+XLA_FLAGS must be set before jax initializes (the rest of the suite sees 1
+device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("whisper-base", "decode_32k")])
+def test_dryrun_combo_compiles(tmp_path, arch, shape):
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(out)],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["chips"] == 256
+    assert rec["memory"]["fits_hbm"]
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["hlo"]["flops"] > 0

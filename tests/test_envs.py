@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+
+from repro.core import StepType, make_environment_spec
+from repro.envs import Bandit, CartpoleSwingup, Catch, DeepSea, MemoryChain, PendulumSwingup, TokenChain
+
+ENVS = [
+    lambda: Catch(seed=0),
+    lambda: DeepSea(size=6, seed=0),
+    lambda: DeepSea(size=6, stochastic=True, seed=0),
+    lambda: CartpoleSwingup(seed=0, episode_len=50),
+    lambda: PendulumSwingup(seed=0, episode_len=50),
+    lambda: MemoryChain(memory_length=5, seed=0),
+    lambda: Bandit(seed=0),
+    lambda: TokenChain(vocab_size=16, episode_len=20, seed=0),
+]
+
+
+@pytest.mark.parametrize("factory", ENVS)
+def test_env_contract(factory):
+    env = factory()
+    spec = make_environment_spec(env)
+    ts = env.reset()
+    assert ts.step_type == StepType.FIRST
+    assert ts.reward is None
+    spec.observations.validate(ts.observation)
+    steps = 0
+    while not ts.last() and steps < 2000:
+        if hasattr(spec.actions, "num_values"):
+            a = np.random.randint(spec.actions.num_values)
+        else:
+            a = np.zeros(spec.actions.shape, np.float32)
+        ts = env.step(a)
+        assert isinstance(ts.reward, float) or np.isscalar(ts.reward)
+        spec.observations.validate(ts.observation)
+        steps += 1
+    assert ts.last(), "episode must terminate"
+    assert ts.discount == 0.0 or ts.discount == 1.0
+
+
+def test_deep_sea_optimal_policy_finds_treasure():
+    env = DeepSea(size=8, seed=1)
+    ts = env.reset()
+    total = 0.0
+    while not ts.last():
+        ts = env.step(env.optimal_action())
+        total += ts.reward
+    assert total > 0.9
+
+
+def test_catch_optimal_paddle_tracking_wins():
+    env = Catch(seed=3)
+    for _ in range(5):
+        ts = env.reset()
+        while not ts.last():
+            board = ts.observation
+            ball_col = int(np.argmax(board[:-1].max(axis=0)))
+            paddle_col = int(np.argmax(board[-1]))
+            a = 1 + np.sign(ball_col - paddle_col)
+            ts = env.step(int(a))
+        assert ts.reward == 1.0

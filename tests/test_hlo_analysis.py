@@ -1,0 +1,69 @@
+"""HLO text analyzer: trip-count weighting, collective bytes, dot flops."""
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+MODULE = textwrap.dedent("""
+    HloModule test
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant(0)
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16] all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%add
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %lim = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %lim), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+      %x = f32[8,16] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %x)
+      %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,16] get-tuple-element(%loop), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert H.shape_bytes("bf16[2,3]{1,0}") == 12
+    assert H.shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert H.shape_bytes("pred[]") == 1
+
+
+def test_while_trip_count_weights_flops_and_collectives():
+    an = H.analyze(MODULE)
+    # dot: 2*8*16*16 flops, executed 12 times
+    assert an.flops == 2 * 8 * 16 * 16 * 12
+    # all-reduce operand 8*16*4 bytes, 12 times
+    assert an.collective_bytes == 8 * 16 * 4 * 12
+    assert an.collectives["all-reduce"]["count"] == 12
+
+
+def test_collective_kind_split():
+    an = H.analyze(MODULE)
+    assert set(an.collectives) == {"all-reduce"}
+
+
+def test_parse_module_finds_entry():
+    comps = H.parse_module(MODULE)
+    assert comps["__entry__"].name == "main"
+    names = {c.name for c in comps.values()}
+    assert {"body", "cond", "add"} <= names

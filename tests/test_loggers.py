@@ -1,0 +1,23 @@
+import csv
+import os
+
+from repro.core.loggers import CSVLogger, Dispatcher, InMemoryLogger, TerminalLogger
+
+
+def test_csv_logger_roundtrip(tmp_path):
+    path = str(tmp_path / "log.csv")
+    lg = CSVLogger(path)
+    lg({"step": 1, "return": 0.5})
+    lg({"step": 2, "return": 0.7, "extra_ignored": 1})
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 2
+    assert rows[1]["step"] == "2"
+
+
+def test_in_memory_and_dispatch(capsys):
+    mem = InMemoryLogger()
+    disp = Dispatcher(mem, TerminalLogger("test"))
+    disp({"a": 1.0})
+    assert mem.rows == [{"a": 1.0}]
+    assert "a=1.000" in capsys.readouterr().out

@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+def test_adam_minimizes_quadratic():
+    opt = optim.adam(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(params)
+        updates, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, updates)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adam_first_step_size_is_lr():
+    opt = optim.adam(0.01)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.array([123.0])}, state, params)
+    # bias correction makes the first step exactly lr * sign(grad)
+    assert float(updates["w"][0]) == pytest.approx(-0.01, rel=1e-4)
+
+
+def test_clipping_bounds_update_norm():
+    opt = optim.sgd(1.0, clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    big = {"w": jnp.full(4, 100.0)}
+    updates, _ = opt.update(big, state, params)
+    assert float(optim.global_norm(updates)) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule_endpoints():
+    sched = optim.cosine_schedule(1.0, total_steps=100, warmup_steps=10)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_periodic_update_copies_on_period():
+    online = {"w": jnp.array([2.0])}
+    target = {"w": jnp.array([1.0])}
+    out = optim.periodic_update(online, target, jnp.asarray(10), 5)
+    assert float(out["w"][0]) == 2.0
+    out = optim.periodic_update(online, target, jnp.asarray(11), 5)
+    assert float(out["w"][0]) == 1.0
+
+
+def test_incremental_update_ema():
+    online = {"w": jnp.array([1.0])}
+    target = {"w": jnp.array([0.0])}
+    out = optim.incremental_update(online, target, tau=0.1)
+    assert float(out["w"][0]) == pytest.approx(0.1)

@@ -1,0 +1,148 @@
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.replay import (Fifo, Lifo, MinSize, Prioritized, RateLimiterTimeout,
+                          SampleToInsertRatio, Table, Uniform, as_iterator)
+
+
+def test_table_insert_sample_uniform():
+    t = Table("t", capacity=100, selector=Uniform(0), rate_limiter=MinSize(1))
+    for i in range(10):
+        t.insert({"x": np.array([i])})
+    assert t.size() == 10
+    items = t.sample(5)
+    assert len(items) == 5
+    for item, prob in items:
+        assert prob == pytest.approx(1 / 10)
+
+
+def test_table_capacity_eviction_fifo_removal():
+    t = Table("t", capacity=5, selector=Uniform(0), rate_limiter=MinSize(1))
+    keys = [t.insert(i) for i in range(8)]
+    assert t.size() == 5
+    live = {it.data for it, _ in t.sample(50)}
+    assert live <= {3, 4, 5, 6, 7}
+
+
+def test_fifo_queue_semantics():
+    t = Table("q", capacity=100, selector=Fifo(), rate_limiter=MinSize(1))
+    for i in range(5):
+        t.insert(i)
+    got = [t.sample(1)[0][0].data for _ in range(5)]
+    assert got == [0, 1, 2, 3, 4]
+
+
+def test_lifo_semantics():
+    t = Table("q", capacity=100, selector=Lifo(), rate_limiter=MinSize(1))
+    for i in range(5):
+        t.insert(i)
+    assert t.sample(1)[0][0].data == 4
+
+
+def test_prioritized_prefers_high_priority():
+    sel = Prioritized(priority_exponent=1.0, seed=0)
+    t = Table("p", capacity=100, selector=sel, rate_limiter=MinSize(1))
+    t.insert("low", priority=0.01)
+    t.insert("high", priority=10.0)
+    counts = {"low": 0, "high": 0}
+    for _ in range(200):
+        item, prob = t.sample(1)[0]
+        counts[item.data] += 1
+    assert counts["high"] > 150
+
+
+def test_priority_update_changes_distribution():
+    sel = Prioritized(priority_exponent=1.0, seed=0)
+    t = Table("p", capacity=10, selector=sel, rate_limiter=MinSize(1))
+    k1 = t.insert("a", priority=1.0)
+    k2 = t.insert("b", priority=1.0)
+    t.update_priorities([k1], [100.0])
+    counts = {"a": 0, "b": 0}
+    for _ in range(100):
+        counts[t.sample(1)[0][0].data] += 1
+    assert counts["a"] > 90
+
+
+def test_rate_limiter_blocks_sampler_until_min_size():
+    limiter = MinSize(5)
+    t = Table("t", 100, Uniform(0), limiter)
+    t.insert(0)
+    with pytest.raises(RateLimiterTimeout):
+        t.sample(1, timeout=0.1)
+
+
+def test_spi_ratio_blocks_fast_learner():
+    limiter = SampleToInsertRatio(samples_per_insert=2.0, min_size_to_sample=2,
+                                  error_buffer=4.0)
+    t = Table("t", 100, Uniform(0), limiter)
+    for i in range(4):
+        t.insert(i)
+    # allowed samples ~ spi*(inserts - min) + tolerance = 2*2+4 = 8ish
+    n = 0
+    try:
+        for _ in range(50):
+            t.sample(1, timeout=0.05)
+            n += 1
+    except RateLimiterTimeout:
+        pass
+    assert 2 <= n <= 12
+
+
+def test_spi_ratio_blocks_fast_actor():
+    limiter = SampleToInsertRatio(samples_per_insert=1.0, min_size_to_sample=1,
+                                  error_buffer=2.0)
+    t = Table("t", 1000, Uniform(0), limiter)
+    n = 0
+    try:
+        for i in range(100):
+            t.insert(i, timeout=0.05)
+            n += 1
+    except RateLimiterTimeout:
+        pass
+    # inserts must stall once the learner lags by > error buffer
+    assert n < 100
+
+
+def test_spi_concurrent_ratio_holds():
+    spi, minsize, tol = 4.0, 10, 20.0
+    limiter = SampleToInsertRatio(spi, minsize, tol)
+    t = Table("t", 10_000, Uniform(0), limiter)
+    stop = time.time() + 1.5
+
+    def actor():
+        while time.time() < stop:
+            try:
+                t.insert(np.zeros(2), timeout=0.2)
+            except RateLimiterTimeout:
+                pass
+
+    def learner():
+        while time.time() < stop:
+            try:
+                t.sample(1, timeout=0.2)
+            except RateLimiterTimeout:
+                pass
+
+    threads = [threading.Thread(target=actor) for _ in range(2)] + \
+              [threading.Thread(target=learner) for _ in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    ins, samp = limiter.inserts, limiter.samples
+    assert ins > minsize
+    # |samples - spi*(inserts-minsize)| bounded by tolerance + in-flight slack
+    assert abs(samp - spi * (ins - minsize)) <= tol + spi * 8
+
+
+def test_dataset_iterator_batches():
+    t = Table("t", 100, Uniform(0), MinSize(1))
+    for i in range(10):
+        t.insert({"obs": np.full((3,), i, np.float32)})
+    it = as_iterator(t, batch_size=4)
+    sample = next(it)
+    assert sample.data["obs"].shape == (4, 3)
+    assert sample.info.keys.shape == (4,)
