@@ -10,25 +10,22 @@ import numpy as np
 
 def run_single_process(env_factory, builder, episodes: int,
                        seed: int = 0) -> Dict[str, List[float]]:
-    """Returns {actor_steps: [...], returns: [...], walltime: [...]}."""
-    from repro.agents.builders import make_agent
-    from repro.core import EnvironmentLoop
+    """Returns {actor_steps: [...], returns: [...], walltime: [...]}.
 
-    env = env_factory(seed)
-    agent = make_agent(builder, seed=seed)
-    loop = EnvironmentLoop(env, agent)
-    steps, rets, wall = [], [], []
-    total_steps = 0
-    t0 = time.time()
-    for _ in range(episodes):
-        r = loop.run_episode()
-        total_steps += r["episode_length"]
-        steps.append(total_steps)
-        rets.append(r["episode_return"])
-        wall.append(time.time() - t0)
-    return {"actor_steps": steps, "returns": rets, "walltime": wall,
-            "learner_steps": int(agent.learner.state.steps)
-            if hasattr(agent.learner.state, "steps") else 0}
+    Thin adapter over ``repro.experiments.run_experiment`` so every curve
+    benchmark runs through the experiments API.
+    """
+    from repro.experiments import ExperimentConfig, run_experiment
+
+    config = ExperimentConfig(builder_factory=lambda spec: builder,
+                              environment_factory=env_factory,
+                              seed=seed, num_episodes=episodes,
+                              eval_episodes=0)
+    result = run_experiment(config)
+    return {"actor_steps": result.actor_steps,
+            "returns": result.train_returns,
+            "walltime": result.walltime,
+            "learner_steps": result.learner_steps}
 
 
 def smooth(xs, k=20):

@@ -9,59 +9,36 @@ plus we report learner-blocked-time, the quantity actor parallelism buys
 down on real hardware."""
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from benchmarks.common import csv_row, smooth
-from repro.agents.builders import make_agent, make_distributed_agent
+from benchmarks.common import csv_row
 from repro.agents.dqn import DQNBuilder, DQNConfig
-from repro.core import EnvironmentLoop, make_environment_spec
 from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_distributed_experiment
 
 SPI = 8.0
 
 
-def _builder(spec, seed):
+def _config(seed: int, target_actor_steps: int) -> ExperimentConfig:
     cfg = DQNConfig(min_replay_size=100, samples_per_insert=SPI,
                     batch_size=32, n_step=1, epsilon=0.15)
-    return DQNBuilder(spec, cfg, seed=seed)
+    return ExperimentConfig(
+        builder_factory=lambda spec: DQNBuilder(spec, cfg, seed=seed),
+        environment_factory=lambda s: Catch(seed=s),
+        seed=seed, max_actor_steps=target_actor_steps, eval_episodes=30)
 
 
 def run_distributed(num_actors: int, target_actor_steps: int = 4000,
                     seed: int = 0):
-    spec = make_environment_spec(Catch(seed=seed))
-    builder = _builder(spec, seed)
-    dist = make_distributed_agent(builder, lambda s: Catch(seed=s),
-                                  num_actors=num_actors, seed=seed)
-    t0 = time.time()
-    try:
-        while True:
-            counts = dist.counter.get_counts()
-            if counts.get("actor_steps", 0) >= target_actor_steps:
-                break
-            if time.time() - t0 > 180:
-                break
-            time.sleep(0.2)
-        counts = dist.counter.get_counts()
-        rl = dist.table.rate_limiter
-        spi_eff = rl.samples / max(rl.inserts - rl.min_size_to_sample, 1)
-        # evaluate the learned policy greedily
-        from repro.agents import dqn as dqn_lib
-        from repro.core import FeedForwardActor, VariableClient
-        policy = dqn_lib.make_eval_policy(spec, builder.cfg)
-        actor = FeedForwardActor(policy, VariableClient(dist.learner))
-        loop = EnvironmentLoop(Catch(seed=seed + 77), actor)
-        rets = [loop.run_episode()["episode_return"] for _ in range(30)]
-        return {
-            "actor_steps": counts.get("actor_steps", 0),
-            "learner_steps": int(dist.learner.state.steps),
-            "spi_effective": spi_eff,
-            "eval_return": float(np.mean(rets)),
-            "walltime": time.time() - t0,
-        }
-    finally:
-        dist.stop()
+    result = run_distributed_experiment(
+        _config(seed, target_actor_steps), num_actors=num_actors,
+        timeout_s=180)
+    ex = result.extras
+    return {
+        "actor_steps": result.counts.get("actor_steps", 0),
+        "learner_steps": result.learner_steps,
+        "spi_effective": ex["spi_effective"],
+        "eval_return": result.final_eval_return,
+        "walltime": ex["walltime"],
+    }
 
 
 def main(target_steps: int = 4000):

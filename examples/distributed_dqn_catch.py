@@ -1,17 +1,14 @@
 """Distributed agent (Fig 4 of the paper): N actor nodes + a learner node +
-a rate-limited replay table, launched on a Launchpad-lite program graph.
+a rate-limited replay table, launched on a Launchpad-lite program graph —
+from the SAME ExperimentConfig a single-process run would use.
 
   PYTHONPATH=src python examples/distributed_dqn_catch.py --actors 4
 """
 import argparse
-import time
 
-import numpy as np
-
-from repro.agents.builders import make_distributed_agent
-from repro.agents.dqn import DQNBuilder, DQNConfig, make_eval_policy
-from repro.core import EnvironmentLoop, FeedForwardActor, VariableClient, make_environment_spec
+from repro.agents.dqn import DQNBuilder, DQNConfig
 from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_distributed_experiment
 
 
 def main():
@@ -20,36 +17,26 @@ def main():
     p.add_argument("--actor-steps", type=int, default=6000)
     args = p.parse_args()
 
-    spec = make_environment_spec(Catch(seed=0))
     cfg = DQNConfig(min_replay_size=100, samples_per_insert=8.0,
                     batch_size=32, n_step=1, epsilon=0.15)
-    builder = DQNBuilder(spec, cfg, seed=0)
-
-    dist = make_distributed_agent(builder, lambda s: Catch(seed=s),
-                                  num_actors=args.actors)
-    print(f"launched: {args.actors} actors + learner + replay "
+    config = ExperimentConfig(
+        builder_factory=lambda spec: DQNBuilder(spec, cfg, seed=0),
+        environment_factory=lambda seed: Catch(seed=seed),
+        seed=0,
+        max_actor_steps=args.actor_steps,
+        eval_episodes=30,
+    )
+    print(f"launching: {args.actors} actors + learner + replay "
           f"(SPI target {cfg.samples_per_insert})")
-    try:
-        t0 = time.time()
-        while True:
-            counts = dist.counter.get_counts()
-            steps = counts.get("actor_steps", 0)
-            if steps >= args.actor_steps or time.time() - t0 > 300:
-                break
-            time.sleep(1.0)
-            rl = dist.table.rate_limiter
-            print(f"actor_steps={steps:6.0f} learner_steps="
-                  f"{int(dist.learner.state.steps):5d} "
-                  f"inserts={rl.inserts} samples={rl.samples}")
-    finally:
-        dist.stop()
+    result = run_distributed_experiment(config, num_actors=args.actors,
+                                        timeout_s=300)
 
-    # evaluate the final policy
-    policy = make_eval_policy(spec, cfg)
-    actor = FeedForwardActor(policy, VariableClient(dist.learner))
-    loop = EnvironmentLoop(Catch(seed=99), actor)
-    rets = [loop.run_episode()["episode_return"] for _ in range(30)]
-    print(f"eval return over 30 episodes: {np.mean(rets):+.2f}")
+    ex = result.extras
+    print(f"actor_steps={result.counts.get('actor_steps', 0):6.0f} "
+          f"learner_steps={result.learner_steps:5d} "
+          f"inserts={ex['inserts']} samples={ex['samples']} "
+          f"spi_effective={ex['spi_effective']:.1f}")
+    print(f"eval return over 30 episodes: {result.final_eval_return:+.2f}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,12 @@
 """Offline RL (§2.6/§3.7): train BC and offline DQN from a fixed dataset —
 no actors, just a learner + dataset, then an evaluator.
 
+BC goes through the experiments API (``BCBuilder`` is an offline
+``AgentBuilder``: no adder, dataset pre-loaded into the replay table);
+the offline-DQN section applies the DQN *learner* directly to the same
+dataset — the paper's point that learners are reusable outside the
+actor/replay loop.
+
   PYTHONPATH=src python examples/offline_bc.py
 """
 import jax
@@ -11,6 +17,7 @@ from repro.agents import bc as bc_lib
 from repro.agents import dqn as dqn_lib
 from repro.core import EnvironmentLoop, FeedForwardActor, VariableClient, make_environment_spec
 from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_offline_experiment
 from repro.replay import MinSize, Table, Uniform, dataset_from_list
 
 
@@ -39,18 +46,23 @@ def evaluate(learner, policy, episodes=25):
 
 
 def main():
-    spec = make_environment_spec(Catch(seed=0))
     items = collect()
     print(f"dataset: {len(items)} transitions from an expert policy")
 
-    cfg = bc_lib.BCConfig()
-    learner = bc_lib.make_learner(spec, cfg, dataset_from_list(items, 64),
-                                  jax.random.key(0))
-    for i in range(400):
-        m = learner.step()
-    print(f"BC final loss {m['loss']:.4f}  "
-          f"eval return {evaluate(learner, bc_lib.make_eval_policy(spec, cfg)):+.2f}")
+    # BC through the offline experiments path
+    config = ExperimentConfig(
+        builder_factory=lambda spec: bc_lib.BCBuilder(
+            spec, items, bc_lib.BCConfig(), seed=0),
+        environment_factory=lambda seed: Catch(seed=seed),
+        seed=0,
+        eval_episodes=25,
+    )
+    result = run_offline_experiment(config, num_learner_steps=400)
+    print(f"BC learner steps {result.learner_steps}  "
+          f"eval return {result.final_eval_return:+.2f}")
 
+    # offline double-DQN: the same learner module, fed the fixed dataset
+    spec = make_environment_spec(Catch(seed=0))
     qcfg = dqn_lib.DQNConfig(prioritized=False)
     qlearner = dqn_lib.make_learner(spec, qcfg, dataset_from_list(items, 64),
                                     jax.random.key(1))

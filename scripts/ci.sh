@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# One-step reproducible CI: deps + tier-1 tests + a ~60s run_experiment
+# smoke on Catch through the repro.experiments API.
+#
+#   bash scripts/ci.sh            # full suite + smoke
+#   SKIP_TESTS=1 bash scripts/ci.sh   # smoke only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Deps are baked into the container image; install is best-effort so the
+# script also works offline.
+python -m pip install -q -r requirements.txt -r requirements-dev.txt \
+    || echo "[ci] pip install skipped (offline?) — using preinstalled deps"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ -z "${SKIP_TESTS:-}" ]]; then
+    echo "[ci] tier-1: python -m pytest -q"
+    python -m pytest -q
+fi
+
+echo "[ci] smoke: DQN on Catch via repro.experiments.run_experiment"
+python - <<'EOF'
+import time
+
+import numpy as np
+
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_experiment
+
+t0 = time.time()
+config = ExperimentConfig(
+    builder_factory=lambda spec: DQNBuilder(
+        spec, DQNConfig(min_replay_size=50, samples_per_insert=0.0,
+                        batch_size=32, n_step=1, epsilon=0.2), seed=0),
+    environment_factory=lambda seed: Catch(seed=seed),
+    seed=0, num_episodes=150, eval_episodes=20)
+result = run_experiment(config)
+final = result.final_eval_return
+print(f"[ci] smoke: {result.learner_steps} learner steps, "
+      f"eval return {final:+.2f}, {time.time() - t0:.0f}s")
+assert result.learner_steps > 0, "learner never stepped"
+assert final is not None and final > np.mean(result.train_returns[:20]), \
+    "smoke run did not improve over early training returns"
+print("[ci] OK")
+EOF

@@ -1,3 +1,7 @@
-"""Acme baseline agents (§3): value-based, actor-critic, planning, offline."""
-from repro.agents import bc, builders, common, continuous, dqfd, dqn, impala, mcts, r2d2  # noqa: F401
+"""Acme baseline agents (§3): value-based, actor-critic, planning, offline.
+
+Every agent exposes a typed ``repro.builders.AgentBuilder`` subclass;
+importing this package registers all eight.
+"""
+from repro.agents import bc, builders, common, continuous, dqfd, dqn, impala, mcts, r2d2, r2d3  # noqa: F401
 from repro.agents.builders import make_agent, make_distributed_agent  # noqa: F401

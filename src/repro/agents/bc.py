@@ -11,6 +11,7 @@ import numpy as np
 
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
 
@@ -77,3 +78,54 @@ def make_eval_policy(spec: EnvironmentSpec, cfg: BCConfig):
         return jnp.argmax(out).astype(jnp.int32)
 
     return policy
+
+
+class BCBuilder(AgentBuilder):
+    """Offline builder (§2.6): learns from a fixed transition dataset.
+
+    There is no insertion path — ``make_replay`` returns a table pre-loaded
+    with the dataset and ``make_adder`` returns None.  Actors built from it
+    are pure evaluators of the cloned policy.
+    """
+
+    def __init__(self, spec: EnvironmentSpec, dataset, cfg: BCConfig = None,
+                 seed: int = 0):
+        cfg = cfg or BCConfig()
+        super().__init__(BuilderOptions(
+            variable_update_period=1,
+            min_observations=0,
+            observations_per_step=1.0,
+            batch_size=cfg.batch_size,
+            offline=True))
+        self.spec = spec
+        self.cfg = cfg
+        self.seed = seed
+        self.dataset = list(dataset)
+        if not self.dataset:
+            raise ValueError("BCBuilder needs a non-empty dataset")
+
+    def make_replay(self):
+        from repro.replay import MinSize, Table, Uniform
+        table = Table("dataset", len(self.dataset), Uniform(self.seed),
+                      MinSize(1))
+        for item in self.dataset:
+            table.insert(item)
+        return table
+
+    def make_adder(self, table):
+        return None              # offline: nothing writes to the dataset
+
+    def make_dataset(self, table):
+        from repro.replay import as_iterator
+        return as_iterator(table, self.cfg.batch_size)
+
+    def make_learner(self, iterator, priority_update_cb=None):
+        return make_learner(self.spec, self.cfg, iterator,
+                            jax.random.key(self.seed))
+
+    def make_policy(self, evaluation: bool = False):
+        return make_eval_policy(self.spec, self.cfg)
+
+    def make_actor(self, policy, variable_client, adder, seed: int = 0):
+        from repro.core import FeedForwardActor
+        return FeedForwardActor(policy, variable_client, adder, rng_seed=seed)

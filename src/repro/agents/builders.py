@@ -1,13 +1,11 @@
-"""Agent assembly: the same builder yields the single-process agent (§2.2)
-and the distributed program (§2.4) — Acme's central design claim.
+"""Agent assembly: the same ``AgentBuilder`` yields the single-process agent
+(§2.2) and the distributed program (§2.4) — Acme's central design claim.
 
-A *builder* bundles the factories:
-  make_replay()            -> (table, rate_limiter)
-  make_adder(table)        -> adder
-  make_dataset(table)      -> learner batch iterator
-  make_learner(it, cb)     -> JaxLearner
-  make_policy(evaluation)  -> policy fn for FeedForward/Recurrent actors
-  make_actor(policy, client, adder) -> Actor
+Builders implement the typed ``repro.builders.AgentBuilder`` contract; the
+execution schedule comes from their frozen ``BuilderOptions`` (no duck-typed
+attribute probing).  These two assembly functions are the low-level layer;
+``repro.experiments`` wraps them in the config-driven run API that examples,
+benchmarks, and tests use.
 """
 from __future__ import annotations
 
@@ -15,31 +13,33 @@ import itertools
 import threading
 from typing import Optional
 
-from repro.core import Agent, Counter, EnvironmentLoop, FeedForwardActor, VariableClient
+from repro.builders import AgentBuilder
+from repro.core import Agent, Counter, EnvironmentLoop, VariableClient
 from repro.distributed.program import LocalLauncher, Program
 
 
-def make_agent(builder, seed: int = 0) -> Agent:
+def make_agent(builder: AgentBuilder, seed: int = 0) -> Agent:
     """Synchronous single-process agent: actor and learner in lockstep."""
+    options = builder.options
     table = builder.make_replay()
     adder = builder.make_adder(table)
     iterator = builder.make_dataset(table)
     learner = builder.make_learner(
         iterator, priority_update_cb=table.update_priorities)
-    client = VariableClient(learner, update_period=builder.variable_update_period)
+    client = VariableClient(learner,
+                            update_period=options.variable_update_period)
     actor = builder.make_actor(builder.make_policy(evaluation=False),
                                client, adder, seed)
-    batch = getattr(getattr(builder, "cfg", None), "batch_size", 1)
-    consuming = getattr(table.selector, "consumes", False)
+    consuming = table.selector.consumes
 
     def can_step():
         if table.rate_limiter.would_block_sample():
             return False
-        return table.size() >= batch if consuming else True
+        return table.size() >= options.batch_size if consuming else True
 
     return Agent(actor, learner,
-                 min_observations=builder.min_observations,
-                 observations_per_step=builder.observations_per_step,
+                 min_observations=options.min_observations,
+                 observations_per_step=options.observations_per_step,
                  can_step=can_step)
 
 
@@ -78,8 +78,9 @@ class _ActorWorker:
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None):
         self.env = env_factory(seed)
-        client = VariableClient(variable_source,
-                                update_period=builder.variable_update_period)
+        client = VariableClient(
+            variable_source,
+            update_period=builder.options.variable_update_period)
         adder = builder.make_adder(table)
         actor = builder.make_actor(builder.make_policy(evaluation=False),
                                    client, adder, seed)
@@ -138,7 +139,8 @@ class _EvaluatorWorker:
         self._stop.set()
 
 
-def make_distributed_agent(builder, env_factory, num_actors: int,
+def make_distributed_agent(builder: AgentBuilder, env_factory,
+                           num_actors: int,
                            seed: int = 0,
                            max_learner_steps: Optional[int] = None,
                            with_evaluator: bool = False) -> DistributedAgent:

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState, fresh_copy
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.networks.heads import l2_project
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
@@ -220,17 +221,20 @@ def make_behavior_policy(spec: EnvironmentSpec, cfg: ContinuousConfig,
     return policy
 
 
-class ContinuousBuilder:
+class ContinuousBuilder(AgentBuilder):
     def __init__(self, spec: EnvironmentSpec, cfg: ContinuousConfig = None,
                  seed: int = 0):
+        cfg = cfg or ContinuousConfig()
+        super().__init__(BuilderOptions(
+            variable_update_period=10,
+            min_observations=cfg.min_replay_size,
+            observations_per_step=max(
+                cfg.batch_size / cfg.samples_per_insert, 1.0)
+            if cfg.samples_per_insert > 0 else 1.0,
+            batch_size=cfg.batch_size))
         self.spec = spec
-        self.cfg = cfg or ContinuousConfig()
+        self.cfg = cfg
         self.seed = seed
-        self.variable_update_period = 10
-        self.min_observations = self.cfg.min_replay_size
-        self.observations_per_step = max(
-            self.cfg.batch_size / self.cfg.samples_per_insert, 1.0) \
-            if self.cfg.samples_per_insert > 0 else 1.0
 
     def make_replay(self):
         from repro import replay as r

@@ -84,7 +84,12 @@ def generate_sequence_demos(env, optimal_action_fn, num_demos: int,
 
 
 class DQfDBuilder(dqn_lib.DQNBuilder):
-    """DQN builder whose dataset mixes in a demonstration table."""
+    """DQN builder whose dataset mixes in a demonstration table.
+
+    Inherits the ``AgentBuilder`` contract (and its ``BuilderOptions``,
+    computed from the config) from ``DQNBuilder``; only the dataset and the
+    priority-update filter differ.
+    """
 
     def __init__(self, spec: EnvironmentSpec, demos, cfg: DQfDConfig = None,
                  seed: int = 0):

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState, importance_weights
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.networks import heads as heads_lib
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
@@ -125,22 +126,25 @@ def make_eval_policy(spec: EnvironmentSpec, cfg: DQNConfig):
     return make_behavior_policy(spec, cfg, epsilon=0.0)
 
 
-class DQNBuilder:
-    """Builder-protocol bundle (see agents.builders)."""
+class DQNBuilder(AgentBuilder):
+    """Typed builder (repro.builders.AgentBuilder) for DQN."""
 
     def __init__(self, spec: EnvironmentSpec, cfg: DQNConfig = None,
                  seed: int = 0, spi_tolerance: float = None):
         from repro import replay as replay_lib
+        cfg = cfg or DQNConfig()
+        super().__init__(BuilderOptions(
+            variable_update_period=10,
+            min_observations=cfg.min_replay_size,
+            observations_per_step=max(
+                cfg.batch_size / cfg.samples_per_insert, 1.0)
+            if cfg.samples_per_insert > 0 else 1.0,
+            batch_size=cfg.batch_size))
         self.spec = spec
-        self.cfg = cfg or DQNConfig()
+        self.cfg = cfg
         self.seed = seed
         self._replay_lib = replay_lib
         self.spi_tolerance = spi_tolerance
-        self.variable_update_period = 10
-        self.min_observations = self.cfg.min_replay_size
-        self.observations_per_step = max(
-            self.cfg.batch_size / self.cfg.samples_per_insert, 1.0) \
-            if self.cfg.samples_per_insert > 0 else 1.0
 
     def make_replay(self):
         r = self._replay_lib

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState, fresh_copy
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.kernels import ref as kernels_ref
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
@@ -157,17 +158,21 @@ class IMPALAActor:
         self._client.update(wait)
 
 
-class IMPALABuilder:
+class IMPALABuilder(AgentBuilder):
     def __init__(self, spec: EnvironmentSpec, cfg: IMPALAConfig = None,
                  seed: int = 0):
+        cfg = cfg or IMPALAConfig()
+        # near on-policy: sync weights every step; step the learner as soon
+        # as the queue holds a full batch (the Agent's can_step guard
+        # prevents blocking on a short queue).
+        super().__init__(BuilderOptions(
+            variable_update_period=1,
+            min_observations=cfg.sequence_length * cfg.batch_size,
+            observations_per_step=1.0,
+            batch_size=cfg.batch_size))
         self.spec = spec
-        self.cfg = cfg or IMPALAConfig()
+        self.cfg = cfg
         self.seed = seed
-        self.variable_update_period = 1      # near on-policy
-        # step the learner as soon as the queue holds a full batch (the
-        # Agent's can_step guard prevents blocking on a short queue).
-        self.min_observations = self.cfg.sequence_length * self.cfg.batch_size
-        self.observations_per_step = 1.0
 
     def make_replay(self):
         from repro import replay as r

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
 from repro.replay.dataset import ReplaySample
@@ -199,16 +200,19 @@ def make_learner(spec: EnvironmentSpec, cfg: MCTSConfig, iterator: Iterator,
     return JaxLearner(state, update, iterator)
 
 
-class MCTSBuilder:
+class MCTSBuilder(AgentBuilder):
     def __init__(self, spec: EnvironmentSpec, model_env_factory,
                  cfg: MCTSConfig = None, seed: int = 0):
+        cfg = cfg or MCTSConfig()
+        super().__init__(BuilderOptions(
+            variable_update_period=5,
+            min_observations=cfg.min_replay_size,
+            observations_per_step=4.0,
+            batch_size=cfg.batch_size))
         self.spec = spec
-        self.cfg = cfg or MCTSConfig()
+        self.cfg = cfg
         self.seed = seed
         self.model_env_factory = model_env_factory
-        self.variable_update_period = 5
-        self.min_observations = self.cfg.min_replay_size
-        self.observations_per_step = 4.0
 
     def make_replay(self):
         from repro import replay as r

@@ -16,6 +16,7 @@ import numpy as np
 from repro import optim
 from repro.agents.common import (JaxLearner, LearnerState, fresh_copy,
                                  importance_weights)
+from repro.builders import AgentBuilder, BuilderOptions
 from repro.core.types import EnvironmentSpec
 from repro.networks.lstm import LSTMNetwork, LSTMState
 from repro.networks.mlp import flatten_obs
@@ -139,16 +140,18 @@ def make_behavior_policy(spec: EnvironmentSpec, cfg: R2D2Config,
     return policy
 
 
-class R2D2Builder:
+class R2D2Builder(AgentBuilder):
     def __init__(self, spec: EnvironmentSpec, cfg: R2D2Config = None,
                  seed: int = 0):
+        cfg = cfg or R2D2Config()
+        super().__init__(BuilderOptions(
+            variable_update_period=10,
+            min_observations=cfg.min_replay_size,
+            observations_per_step=max(float(cfg.period), 1.0),
+            batch_size=cfg.batch_size))
         self.spec = spec
-        self.cfg = cfg or R2D2Config()
+        self.cfg = cfg
         self.seed = seed
-        self.variable_update_period = 10
-        self.min_observations = self.cfg.min_replay_size
-        self.observations_per_step = max(
-            float(self.cfg.period), 1.0)
 
     def make_replay(self):
         from repro import replay as r

@@ -19,7 +19,12 @@ class R2D3Config(r2d2_lib.R2D2Config):
 
 
 class R2D3Builder(r2d2_lib.R2D2Builder):
-    """R2D2 builder whose dataset mixes in demonstration sequences."""
+    """R2D2 builder whose dataset mixes in demonstration sequences.
+
+    Inherits the ``AgentBuilder`` contract (and its ``BuilderOptions``)
+    from ``R2D2Builder``; only the dataset and the priority-update filter
+    differ.
+    """
 
     def __init__(self, spec: EnvironmentSpec, demo_sequences,
                  cfg: R2D3Config = None, seed: int = 0):

@@ -1,0 +1,2 @@
+"""Formal builder protocol: the typed contract every agent implements."""
+from repro.builders.base import AgentBuilder, BuilderOptions, registered_builders  # noqa: F401

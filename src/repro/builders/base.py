@@ -1,0 +1,127 @@
+"""The formal builder protocol (§2.2/§2.4 of the paper).
+
+Acme's central design claim is that ONE builder yields both the
+single-process agent and the distributed program.  ``AgentBuilder`` turns
+the seed's informal duck-typed convention into a typed contract:
+
+  make_replay()            -> Table           (replay buffer / queue)
+  make_adder(table)        -> Adder | None    (None for offline builders)
+  make_dataset(table)      -> learner batch iterator
+  make_learner(it, cb)     -> Learner
+  make_policy(evaluation)  -> policy fn (or None for planning actors)
+  make_actor(policy, client, adder, seed) -> Actor
+
+plus a frozen ``BuilderOptions`` bundle replacing the loose
+``variable_update_period`` / ``min_observations`` / ``observations_per_step``
+instance attributes that every agent used to hand-roll.  Execution layers
+(``repro.agents.builders``, ``repro.experiments``) consume only this
+contract, so new execution modes (offline-only, evaluator fleets, async
+actors) never require per-agent edits.
+
+Concrete subclasses self-register; ``registered_builders()`` is the basis
+of the conformance test in ``tests/test_builders_api.py``.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import inspect
+from typing import Any, Dict, Iterator, List, Optional, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class BuilderOptions:
+    """Execution-schedule knobs shared by every agent.
+
+    variable_update_period: actor->learner weight-sync cadence (in actor
+        ``update()`` calls).
+    min_observations: observations before the first learner step (the
+        single-process analogue of the rate limiter's min_size_to_sample).
+    observations_per_step: observations per learner step (the synchronous
+        samples-per-insert schedule, §2.5).
+    batch_size: learner batch size — used by execution layers to decide
+        whether a consuming (queue) dataset can serve a full batch.
+    offline: the builder learns from a fixed dataset; it has no adder and
+        its actors never feed replay (§2.6).
+    """
+
+    variable_update_period: int = 10
+    min_observations: int = 0
+    observations_per_step: float = 1.0
+    batch_size: int = 1
+    offline: bool = False
+
+    def __post_init__(self):
+        if self.variable_update_period < 1:
+            raise ValueError(
+                f"variable_update_period must be >= 1, got "
+                f"{self.variable_update_period}")
+        if self.min_observations < 0:
+            raise ValueError(
+                f"min_observations must be >= 0, got {self.min_observations}")
+        if self.observations_per_step <= 0:
+            raise ValueError(
+                f"observations_per_step must be > 0, got "
+                f"{self.observations_per_step}")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+
+
+class AgentBuilder(abc.ABC):
+    """Typed factory bundle from which agents are assembled.
+
+    Subclasses pass their ``BuilderOptions`` to ``super().__init__`` and
+    implement the six ``make_*`` factories.  Concrete subclasses are
+    recorded in a registry used by the builder-conformance test.
+    """
+
+    _registry: List[Type["AgentBuilder"]] = []
+
+    def __init__(self, options: BuilderOptions):
+        if not isinstance(options, BuilderOptions):
+            raise TypeError(
+                f"options must be a BuilderOptions, got {type(options)!r}")
+        self._options = options
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        AgentBuilder._registry.append(cls)
+
+    @property
+    def options(self) -> BuilderOptions:
+        return self._options
+
+    # ------------------------------------------------------ factory contract
+    @abc.abstractmethod
+    def make_replay(self):
+        """The replay table (or queue) feeding the learner."""
+
+    @abc.abstractmethod
+    def make_adder(self, table) -> Optional[Any]:
+        """An adder writing actor experience into ``table``; None if the
+        builder is offline (fixed dataset, no insertion path)."""
+
+    @abc.abstractmethod
+    def make_dataset(self, table) -> Iterator:
+        """The learner-facing batch iterator over ``table``."""
+
+    @abc.abstractmethod
+    def make_learner(self, iterator, priority_update_cb=None):
+        """The learner consuming ``iterator``; ``priority_update_cb`` feeds
+        TD-error priorities back to the replay table (may be ignored)."""
+
+    @abc.abstractmethod
+    def make_policy(self, evaluation: bool = False):
+        """The policy function (behaviour or greedy); None for actors that
+        plan rather than evaluate a standalone policy (MCTS)."""
+
+    @abc.abstractmethod
+    def make_actor(self, policy, variable_client, adder, seed: int = 0):
+        """The actor running ``policy``, pulling weights from
+        ``variable_client`` and feeding ``adder`` (which may be None)."""
+
+
+def registered_builders() -> List[Type[AgentBuilder]]:
+    """All concrete AgentBuilder subclasses imported so far."""
+    return [cls for cls in AgentBuilder._registry
+            if not inspect.isabstract(cls)]

@@ -1,4 +1,5 @@
 """Acme's core: actors, learners, agents, environment loops, variable flow."""
+from repro.builders import AgentBuilder, BuilderOptions  # noqa: F401
 from repro.core.actors import FeedForwardActor, RecurrentActor  # noqa: F401
 from repro.core.agent import Agent  # noqa: F401
 from repro.core.interfaces import Actor, Learner, VariableSource, Worker  # noqa: F401

@@ -25,8 +25,24 @@ class Handle:
 
     def __getattr__(self, item):
         # method-call forwarding: handle.method(...) == object.method(...)
+        # Dunder probes (copy.deepcopy, pickle, inspect) must NOT construct
+        # the node as a side effect — report them absent instead.
+        if item.startswith("__") and item.endswith("__"):
+            raise AttributeError(item)
         obj = self.dereference()
         return getattr(obj, item)
+
+
+class WorkerErrors(RuntimeError):
+    """Aggregate of every worker failure in a launched program (3.10-era
+    stand-in for ExceptionGroup) — no error is silently dropped."""
+
+    def __init__(self, errors: List[BaseException]):
+        self.errors = list(errors)
+        summary = "; ".join(f"[{i}] {type(e).__name__}: {e}"
+                            for i, e in enumerate(self.errors))
+        super().__init__(
+            f"{len(self.errors)} worker(s) failed: {summary}")
 
 
 class Node:
@@ -122,5 +138,7 @@ class LocalLauncher:
         for t in self.threads:
             remaining = None if deadline is None else max(deadline - time.time(), 0)
             t.join(remaining)
-        if self._errors:
+        if len(self._errors) == 1:
             raise self._errors[0]
+        if self._errors:
+            raise WorkerErrors(self._errors)

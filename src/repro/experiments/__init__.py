@@ -1,0 +1,13 @@
+"""Experiments layer: config-driven runs over the AgentBuilder protocol.
+
+The single way examples, benchmarks, and tests construct agents:
+
+    config = ExperimentConfig(builder_factory=..., environment_factory=...)
+    result = run_experiment(config)                        # §2.2
+    result = run_distributed_experiment(config, num_actors=4)   # §2.4
+    result = run_offline_experiment(config, num_learner_steps=500)  # §2.6
+"""
+from repro.experiments.config import (  # noqa: F401
+    ExperimentConfig, ExperimentResult)
+from repro.experiments.run import (  # noqa: F401
+    run_distributed_experiment, run_experiment, run_offline_experiment)

@@ -1,0 +1,79 @@
+"""Experiment configuration: everything needed to reproduce a run.
+
+An ``ExperimentConfig`` is the single declarative object from which both
+``run_experiment`` (single-process, §2.2) and ``run_distributed_experiment``
+(Launchpad-lite program, §2.4) construct the SAME agent — the builder is
+shared unchanged between the two execution modes, which is the paper's
+central modularity claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.builders import AgentBuilder
+from repro.core.types import Environment, EnvironmentSpec
+
+BuilderFactory = Callable[[EnvironmentSpec], AgentBuilder]
+EnvironmentFactory = Callable[[int], Environment]
+LoggerFactory = Callable[[str], Callable[[Dict[str, Any]], None]]
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    """Declarative description of a training run.
+
+    builder_factory: spec -> AgentBuilder (called once per run).
+    environment_factory: seed -> Environment (called per actor/evaluator).
+    seed: base RNG seed; actors and evaluators derive offsets from it.
+    num_episodes: training episodes (single-process runs).
+    max_actor_steps: stop once the shared actor-step counter passes this
+        (distributed runs; optional cap for single-process runs).
+    logger_factory: label -> logger callable, attached to the train loop.
+    checkpoint_dir: if set, learner state is checkpointed there.
+    checkpoint_every: learner steps between checkpoints (0 = only final).
+    eval_every: run an eval pass every N training episodes (0 = only final).
+    eval_episodes: episodes per eval pass.
+    """
+
+    builder_factory: BuilderFactory
+    environment_factory: EnvironmentFactory
+    seed: int = 0
+    num_episodes: int = 100
+    max_actor_steps: Optional[int] = None
+    logger_factory: Optional[LoggerFactory] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    eval_every: int = 0
+    eval_episodes: int = 10
+
+    def __post_init__(self):
+        if self.num_episodes < 1:
+            raise ValueError(f"num_episodes must be >= 1, "
+                             f"got {self.num_episodes}")
+        if self.eval_every < 0 or self.eval_episodes < 0:
+            raise ValueError("eval cadence values must be >= 0")
+        if self.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be >= 0, "
+                             f"got {self.checkpoint_every}")
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """What a run hands back: curves, eval points, and the live learner."""
+
+    train_returns: List[float]
+    actor_steps: List[int]
+    walltime: List[float]
+    # (progress, mean_return): progress is actor steps for online runs,
+    # learner steps for offline runs (no actors exist there).
+    eval_returns: List[Tuple[int, float]]
+    counts: Dict[str, float]
+    learner_steps: int
+    learner: Any
+    builder: AgentBuilder
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_eval_return(self) -> Optional[float]:
+        return self.eval_returns[-1][1] if self.eval_returns else None

@@ -1,0 +1,192 @@
+"""Experiment entrypoints: one config, three execution modes.
+
+``run_experiment`` and ``run_distributed_experiment`` are symmetric: both
+take an ``ExperimentConfig``, call its builder factory exactly once, and
+drive the SAME builder through the single-process agent (§2.2) or the
+Launchpad-lite program graph (§2.4).  ``run_offline_experiment`` drives an
+offline builder (fixed dataset, no actors — §2.6).  These subsume the
+hand-rolled driver loops that examples/benchmarks/tests used to write
+around ``make_agent`` / ``make_distributed_agent``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.agents.builders import make_agent, make_distributed_agent
+from repro.core import (Counter, EnvironmentLoop, VariableClient,
+                        make_environment_spec)
+from repro.experiments.config import ExperimentConfig, ExperimentResult
+
+_EVAL_SEED_OFFSET = 1_000_003
+
+
+def _evaluate(config: ExperimentConfig, builder, variable_source,
+              episodes: Optional[int] = None, counter=None) -> float:
+    """One eval pass: a greedy actor with no adder (§4.2's evaluator)."""
+    episodes = config.eval_episodes if episodes is None else episodes
+    if episodes <= 0:
+        return float("nan")
+    env = config.environment_factory(config.seed + _EVAL_SEED_OFFSET)
+    client = VariableClient(variable_source)
+    actor = builder.make_actor(builder.make_policy(evaluation=True),
+                               client, adder=None,
+                               seed=config.seed + _EVAL_SEED_OFFSET)
+    loop = EnvironmentLoop(env, actor, counter=counter, label="evaluator")
+    return float(np.mean([loop.run_episode()["episode_return"]
+                          for _ in range(episodes)]))
+
+
+def _make_checkpointer(config: ExperimentConfig):
+    if not config.checkpoint_dir:
+        return None
+    from repro.checkpoint import Checkpointer
+    return Checkpointer(config.checkpoint_dir)
+
+
+def run_experiment(config: ExperimentConfig,
+                   num_episodes: Optional[int] = None) -> ExperimentResult:
+    """Single-process run: the env loop drives an Agent built from the
+    config's builder; eval and checkpointing happen on their cadences."""
+    env = config.environment_factory(config.seed)
+    spec = make_environment_spec(env)
+    builder = config.builder_factory(spec)
+    agent = make_agent(builder, seed=config.seed)
+    counter = Counter()
+    logger = (config.logger_factory("train")
+              if config.logger_factory else None)
+    loop = EnvironmentLoop(env, agent, counter=counter, logger=logger,
+                           label="actor")
+    checkpointer = _make_checkpointer(config)
+    last_ckpt_step = 0
+
+    episodes = config.num_episodes if num_episodes is None else num_episodes
+    returns, steps, wall, evals = [], [], [], []
+    total_steps = 0
+    t0 = time.time()
+    for episode in range(episodes):
+        result = loop.run_episode()
+        total_steps += result["episode_length"]
+        returns.append(result["episode_return"])
+        steps.append(total_steps)
+        wall.append(time.time() - t0)
+        if config.eval_every and config.eval_episodes > 0 \
+                and (episode + 1) % config.eval_every == 0:
+            evals.append((total_steps,
+                          _evaluate(config, builder, agent.learner,
+                                    counter=counter)))
+        if checkpointer and config.checkpoint_every:
+            learner_steps = int(agent.learner.state.steps)
+            if learner_steps - last_ckpt_step >= config.checkpoint_every:
+                checkpointer.save(agent.learner.state, learner_steps)
+                last_ckpt_step = learner_steps
+        if (config.max_actor_steps is not None
+                and total_steps >= config.max_actor_steps):
+            break
+
+    # final eval — unless disabled, or a periodic eval already ran at
+    # exactly this point
+    if config.eval_episodes > 0 and (not evals or evals[-1][0] != total_steps):
+        evals.append((total_steps,
+                      _evaluate(config, builder, agent.learner,
+                                counter=counter)))
+    learner_steps = int(agent.learner.state.steps)
+    if checkpointer:
+        checkpointer.save(agent.learner.state, learner_steps)
+    return ExperimentResult(
+        train_returns=returns, actor_steps=steps, walltime=wall,
+        eval_returns=evals, counts=counter.get_counts(),
+        learner_steps=learner_steps, learner=agent.learner, builder=builder)
+
+
+def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
+                               max_actor_steps: Optional[int] = None,
+                               timeout_s: float = 300.0,
+                               with_evaluator: bool = False,
+                               poll_s: float = 0.2) -> ExperimentResult:
+    """Distributed run: the SAME builder, unchanged, on the Launchpad-lite
+    graph (Fig 4) — N actor nodes + learner + rate-limited replay."""
+    if num_actors < 1:
+        raise ValueError(f"num_actors must be >= 1, got {num_actors}")
+    spec = make_environment_spec(config.environment_factory(config.seed))
+    builder = config.builder_factory(spec)
+    target = (config.max_actor_steps if max_actor_steps is None
+              else max_actor_steps)
+    dist = make_distributed_agent(builder, config.environment_factory,
+                                  num_actors=num_actors, seed=config.seed,
+                                  with_evaluator=with_evaluator)
+    checkpointer = _make_checkpointer(config)
+    t0 = time.time()
+    try:
+        while time.time() - t0 < timeout_s:
+            counts = dist.counter.get_counts()
+            if target is not None and counts.get("actor_steps", 0) >= target:
+                break
+            time.sleep(poll_s)
+        counts = dist.counter.get_counts()
+        rl = dist.table.rate_limiter
+        extras = {
+            "num_actors": num_actors,
+            "inserts": rl.inserts,
+            "samples": rl.samples,
+            "min_size_to_sample": rl.min_size_to_sample,
+            "spi_effective": rl.samples / max(
+                rl.inserts - rl.min_size_to_sample, 1),
+            "walltime": time.time() - t0,
+        }
+        if with_evaluator:
+            extras["evaluator_returns"] = list(dist.evaluator.returns)
+    finally:
+        dist.stop()
+
+    total_steps = int(counts.get("actor_steps", 0))
+    evals = ([(total_steps, _evaluate(config, builder, dist.learner))]
+             if config.eval_episodes > 0 else [])
+    learner_steps = int(dist.learner.state.steps)
+    if checkpointer:
+        checkpointer.save(dist.learner.state, learner_steps)
+    return ExperimentResult(
+        train_returns=[], actor_steps=[total_steps], walltime=[extras["walltime"]],
+        eval_returns=evals, counts=counts, learner_steps=learner_steps,
+        learner=dist.learner, builder=builder, extras=extras)
+
+
+def run_offline_experiment(config: ExperimentConfig,
+                           num_learner_steps: int = 1000) -> ExperimentResult:
+    """Offline run (§2.6): no actors — step the learner over the builder's
+    fixed dataset, then evaluate the resulting policy."""
+    spec = make_environment_spec(config.environment_factory(config.seed))
+    builder = config.builder_factory(spec)
+    if not builder.options.offline:
+        raise ValueError(
+            f"{type(builder).__name__} is not an offline builder "
+            f"(options.offline is False)")
+    table = builder.make_replay()
+    iterator = builder.make_dataset(table)
+    learner = builder.make_learner(
+        iterator, priority_update_cb=table.update_priorities)
+    logger = (config.logger_factory("learner")
+              if config.logger_factory else None)
+    checkpointer = _make_checkpointer(config)
+    evals = []
+    t0 = time.time()
+    for step in range(num_learner_steps):
+        metrics = learner.step()
+        if logger:
+            logger(metrics)
+        if config.eval_every and config.eval_episodes > 0 \
+                and (step + 1) % config.eval_every == 0:
+            evals.append((step + 1, _evaluate(config, builder, learner)))
+    if config.eval_episodes > 0 and (not evals
+                                     or evals[-1][0] != num_learner_steps):
+        evals.append((num_learner_steps, _evaluate(config, builder, learner)))
+    learner_steps = int(learner.state.steps)
+    if checkpointer:
+        checkpointer.save(learner.state, learner_steps)
+    return ExperimentResult(
+        train_returns=[], actor_steps=[], walltime=[time.time() - t0],
+        eval_returns=evals, counts={}, learner_steps=learner_steps,
+        learner=learner, builder=builder,
+        extras={"dataset_size": table.size()})

@@ -1,5 +1,8 @@
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.adders import EpisodeAdder, NStepTransitionAdder, SequenceAdder

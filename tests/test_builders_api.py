@@ -1,0 +1,314 @@
+"""Builder-conformance net for the AgentBuilder protocol + experiments API.
+
+Every registered ``AgentBuilder`` subclass is instantiated against a tiny
+env spec and driven through the full factory contract:
+replay -> adder -> dataset -> learner -> policy -> actor, ending in a real
+learner step.  Plus: ``BuilderOptions`` validation, the no-duck-typing
+guarantee, and single-process vs distributed parity through the SAME
+builder via ``repro.experiments``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.agents  # noqa: F401  (imports register all builders)
+from repro.builders import AgentBuilder, BuilderOptions, registered_builders
+from repro.core import EnvironmentLoop, VariableClient, make_environment_spec
+from repro.envs import Catch, DeepSea, PendulumSwingup
+
+
+def _catch_spec():
+    return make_environment_spec(Catch(seed=0))
+
+
+def _collect_catch_transitions(n_episodes=10):
+    from repro.adders import NStepTransitionAdder
+    from repro.replay import MinSize, Table, Uniform
+
+    env = Catch(seed=0)
+    table = Table("tmp", 10_000, Uniform(0), MinSize(1))
+    adder = NStepTransitionAdder(table, 1, 0.99)
+    rng = np.random.RandomState(0)
+    for _ in range(n_episodes):
+        ts = env.reset()
+        adder.add_first(ts)
+        while not ts.last():
+            a = int(rng.randint(3))
+            ts = env.step(a)
+            adder.add(a, ts)
+    return [table._items[k].data for k in table._order]
+
+
+def _make_dqn():
+    from repro.agents.dqn import DQNBuilder, DQNConfig
+    cfg = DQNConfig(min_replay_size=8, samples_per_insert=0.0, batch_size=8,
+                    n_step=1)
+    return DQNBuilder(_catch_spec(), cfg, seed=0), Catch(seed=0)
+
+
+def _make_dqfd():
+    from repro.agents.dqfd import (DQfDBuilder, DQfDConfig,
+                                   generate_deep_sea_demos)
+    demos = generate_deep_sea_demos(DeepSea(size=4, seed=0), num_demos=4)
+    cfg = DQfDConfig(min_replay_size=8, samples_per_insert=0.0, batch_size=8,
+                     n_step=1, demo_ratio=0.5)
+    spec = make_environment_spec(DeepSea(size=4, seed=0))
+    return DQfDBuilder(spec, demos, cfg, seed=0), DeepSea(size=4, seed=0)
+
+
+def _make_r2d2():
+    from repro.agents.r2d2 import R2D2Builder, R2D2Config
+    cfg = R2D2Config(sequence_length=4, period=2, burn_in=0, batch_size=4,
+                     min_replay_size=4, samples_per_insert=0.0)
+    return R2D2Builder(_catch_spec(), cfg, seed=0), Catch(seed=0)
+
+
+def _make_r2d3():
+    from repro.agents.dqfd import generate_sequence_demos
+    from repro.agents.r2d3 import R2D3Builder, R2D3Config
+    env = DeepSea(size=4, seed=0)
+    demos = generate_sequence_demos(DeepSea(size=4, seed=0),
+                                    lambda e: e.optimal_action(),
+                                    num_demos=4, sequence_length=4, period=3)
+    cfg = R2D3Config(sequence_length=4, period=3, burn_in=0, batch_size=4,
+                     min_replay_size=4, samples_per_insert=0.0,
+                     demo_ratio=0.5)
+    spec = make_environment_spec(env)
+    return R2D3Builder(spec, demos, cfg, seed=0), DeepSea(size=4, seed=0)
+
+
+def _make_impala():
+    from repro.agents.impala import IMPALABuilder, IMPALAConfig
+    cfg = IMPALAConfig(sequence_length=3, batch_size=2)
+    return IMPALABuilder(_catch_spec(), cfg, seed=0), Catch(seed=0)
+
+
+def _make_mcts():
+    from repro.agents.mcts import MCTSBuilder, MCTSConfig
+    cfg = MCTSConfig(num_simulations=4, search_depth=4, batch_size=2,
+                     min_replay_size=2)
+    return (MCTSBuilder(_catch_spec(), lambda seed: Catch(seed=seed), cfg,
+                        seed=0), Catch(seed=0))
+
+
+def _make_continuous():
+    from repro.agents.continuous import ContinuousBuilder, ContinuousConfig
+    cfg = ContinuousConfig(algo="d4pg", hidden=32, batch_size=8,
+                           min_replay_size=8, samples_per_insert=0.0,
+                           n_step=1, num_atoms=11, vmax=30.0)
+    env = PendulumSwingup(seed=0, episode_len=30)
+    return (ContinuousBuilder(make_environment_spec(env), cfg, seed=0),
+            PendulumSwingup(seed=0, episode_len=30))
+
+
+def _make_bc():
+    from repro.agents.bc import BCBuilder, BCConfig
+    items = _collect_catch_transitions(4)
+    return (BCBuilder(_catch_spec(), items, BCConfig(batch_size=8), seed=0),
+            Catch(seed=0))
+
+
+FACTORIES = {
+    "DQNBuilder": _make_dqn,
+    "DQfDBuilder": _make_dqfd,
+    "R2D2Builder": _make_r2d2,
+    "R2D3Builder": _make_r2d3,
+    "IMPALABuilder": _make_impala,
+    "MCTSBuilder": _make_mcts,
+    "ContinuousBuilder": _make_continuous,
+    "BCBuilder": _make_bc,
+}
+
+
+def test_all_eight_builders_registered():
+    names = {cls.__name__ for cls in registered_builders()}
+    assert names >= set(FACTORIES), f"missing builders: {set(FACTORIES) - names}"
+
+
+@pytest.mark.parametrize("cls", registered_builders(),
+                         ids=lambda c: c.__name__)
+def test_builder_conformance(cls):
+    factory = FACTORIES.get(cls.__name__)
+    assert factory is not None, (
+        f"{cls.__name__} is registered but has no conformance factory — "
+        f"add one to FACTORIES in tests/test_builders_api.py")
+    builder, env = factory()
+
+    # --- the typed contract
+    assert isinstance(builder, AgentBuilder)
+    assert isinstance(builder.options, BuilderOptions)
+    assert builder.options.batch_size >= 1
+
+    # --- factory round-trip: replay -> adder -> dataset -> learner ->
+    # policy -> actor
+    table = builder.make_replay()
+    adder = builder.make_adder(table)
+    if builder.options.offline:
+        assert adder is None, "offline builders must not build adders"
+    iterator = builder.make_dataset(table)
+    learner = builder.make_learner(
+        iterator, priority_update_cb=table.update_priorities)
+    policy = builder.make_policy(evaluation=False)
+    actor = builder.make_actor(policy, VariableClient(learner), adder,
+                               seed=0)
+    for method in ("select_action", "observe_first", "observe", "update"):
+        assert callable(getattr(actor, method)), f"actor lacks {method}"
+
+    # --- the actor acts and (online builders) feeds the replay table
+    for _ in range(3):
+        ts = env.reset()
+        actor.observe_first(ts)
+        while not ts.last():
+            action = actor.select_action(ts.observation)
+            ts = env.step(action)
+            actor.observe(action, ts)
+    if not builder.options.offline:
+        assert table.size() > 0, "actor experience never reached replay"
+
+    # --- the learner consumes a real batch
+    if not table.rate_limiter.would_block_sample() \
+            and table.size() >= builder.options.batch_size:
+        metrics = learner.step()
+        assert np.isfinite(metrics["loss"])
+
+
+def test_builder_options_validation():
+    with pytest.raises(ValueError):
+        BuilderOptions(batch_size=0)
+    with pytest.raises(ValueError):
+        BuilderOptions(variable_update_period=0)
+    with pytest.raises(ValueError):
+        BuilderOptions(min_observations=-1)
+    with pytest.raises(ValueError):
+        BuilderOptions(observations_per_step=0.0)
+
+
+def test_builder_options_frozen():
+    opts = BuilderOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.batch_size = 2
+
+
+def test_builder_requires_options():
+    class Bad(AgentBuilder):
+        def make_replay(self): ...
+        def make_adder(self, table): ...
+        def make_dataset(self, table): ...
+        def make_learner(self, iterator, priority_update_cb=None): ...
+        def make_policy(self, evaluation=False): ...
+        def make_actor(self, policy, variable_client, adder, seed=0): ...
+
+    try:
+        with pytest.raises(TypeError):
+            Bad(options={"batch_size": 4})
+    finally:
+        # don't leak the test-local class into the registry
+        AgentBuilder._registry.remove(Bad)
+
+
+def test_single_vs_distributed_parity():
+    """Acceptance: run_distributed_experiment drives the same DQN builder
+    unchanged — both execution modes learn from one ExperimentConfig."""
+    from repro.agents.dqn import DQNBuilder, DQNConfig
+    from repro.experiments import (ExperimentConfig, run_experiment,
+                                   run_distributed_experiment)
+
+    def builder_factory(spec):
+        return DQNBuilder(spec, DQNConfig(min_replay_size=30,
+                                          samples_per_insert=4.0,
+                                          batch_size=16, n_step=1,
+                                          epsilon=0.2), seed=0)
+
+    config = ExperimentConfig(builder_factory=builder_factory,
+                              environment_factory=lambda s: Catch(seed=s),
+                              seed=0, num_episodes=40, eval_episodes=10)
+
+    single = run_experiment(config)
+    assert single.counts["actor_steps"] > 0
+    assert single.learner_steps > 0
+    assert type(single.builder).__name__ == "DQNBuilder"
+
+    dist = run_distributed_experiment(config, num_actors=2,
+                                      max_actor_steps=800, timeout_s=90)
+    assert dist.counts["actor_steps"] > 0
+    assert dist.learner_steps > 0
+    # parity: one config, one builder class, both execution modes evaluate
+    assert type(dist.builder) is type(single.builder)
+    assert dist.extras["num_actors"] == 2
+    assert np.isfinite(dist.final_eval_return)
+    assert np.isfinite(single.final_eval_return)
+
+
+def test_offline_experiment_runs_bc():
+    from repro.agents.bc import BCBuilder, BCConfig
+    from repro.experiments import ExperimentConfig, run_offline_experiment
+
+    items = _collect_catch_transitions(6)
+    config = ExperimentConfig(
+        builder_factory=lambda spec: BCBuilder(spec, items,
+                                               BCConfig(batch_size=16),
+                                               seed=0),
+        environment_factory=lambda s: Catch(seed=s),
+        seed=0, eval_episodes=2)
+    result = run_offline_experiment(config, num_learner_steps=20)
+    assert result.learner_steps == 20
+    assert result.extras["dataset_size"] == len(items)
+    assert np.isfinite(result.final_eval_return)
+
+
+def test_offline_experiment_rejects_online_builder():
+    from repro.agents.dqn import DQNBuilder
+    from repro.experiments import ExperimentConfig, run_offline_experiment
+
+    config = ExperimentConfig(
+        builder_factory=lambda spec: DQNBuilder(spec, seed=0),
+        environment_factory=lambda s: Catch(seed=s))
+    with pytest.raises(ValueError, match="offline"):
+        run_offline_experiment(config, num_learner_steps=1)
+
+
+def test_worker_errors_aggregated():
+    """LocalLauncher.join must surface EVERY worker failure, not just the
+    first (satellite bugfix)."""
+    from repro.distributed.program import (LocalLauncher, Program,
+                                           WorkerErrors)
+
+    class Exploder:
+        def __init__(self, msg):
+            self.msg = msg
+
+        def run(self):
+            raise RuntimeError(self.msg)
+
+    prog = Program()
+    prog.add_node("a", Exploder, "boom-a", is_worker=True)
+    prog.add_node("b", Exploder, "boom-b", is_worker=True)
+    launcher = LocalLauncher(prog).launch()
+    with pytest.raises(WorkerErrors) as exc_info:
+        launcher.join(timeout=5)
+    assert len(exc_info.value.errors) == 2
+    assert "boom-a" in str(exc_info.value) and "boom-b" in str(exc_info.value)
+
+
+def test_handle_dunder_lookup_does_not_construct_node():
+    """Dunder probes on a Handle (deepcopy/pickle/inspect) must raise
+    AttributeError instead of lazily constructing the node."""
+    from repro.distributed.program import Program
+
+    constructed = []
+
+    def factory():
+        constructed.append(1)
+        return object()
+
+    prog = Program()
+    handle = prog.add_node("lazy", factory)
+    for dunder in ("__deepcopy__", "__copy__", "__fspath__"):
+        with pytest.raises(AttributeError):
+            getattr(handle, dunder)
+    assert not constructed, "dunder probe constructed the node"
+    # non-dunder access still resolves lazily
+    assert isinstance(handle.__class__, type)   # type lookup, not __getattr__
+    handle.dereference()
+    assert constructed
