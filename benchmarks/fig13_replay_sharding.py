@@ -1,0 +1,133 @@
+"""Fig 13: replay-service sharding — aggregate throughput vs shard count.
+
+The §2.5 rate limiter couples every actor and learner through one condition
+variable: with a production-tight error buffer the table admits only a couple
+of operations between forced handoffs, so a single table is bound by
+blocked-thread wakeups (notify_all storms over every waiter + lock convoy),
+far below CPU bound.  ``ShardedReplay`` gives each shard its own table,
+selector, and limiter: the coupling — and the wakeups — become per shard,
+handoffs pipeline across shards, and the service's aggregate throughput
+recovers with the shard count.
+
+Workload (identical at every shard count): ``ACTORS`` insert threads and
+``LEARNERS`` sample threads hammer one replay service; shards are built from
+the same ``make_replay``-style factory a builder would supply (Uniform
+selector, SPI=1 limiter with a tight error buffer).  Throughput is total
+(inserts + samples) / total time over ``TRIALS`` interleaved trials — thread
+scheduling is noisy, so single trials are not representative.  The per-shard
+SPI invariant is checked after every trial.
+
+Acceptance: >= 2x aggregate throughput at 4 shards vs 1.
+
+    python benchmarks/fig13_replay_sharding.py            # full sweep
+    python benchmarks/fig13_replay_sharding.py --smoke    # ~2s CI check
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.replay import (RateLimiterTimeout, SampleToInsertRatio, Table,
+                          Uniform, make_replay_shards)
+
+SHARD_COUNTS = (1, 2, 4)
+ACTORS = 4
+LEARNERS = 4
+SPI = 1.0
+MIN_SIZE = 1
+ERROR_BUFFER = 2.0
+TRIALS = 3
+DURATION = 1.0
+ITEM = np.zeros(128, np.float32)
+
+
+def _make_factory():
+    return lambda: Table("fig13", 100_000, Uniform(0),
+                         SampleToInsertRatio(SPI, MIN_SIZE,
+                                             error_buffer=ERROR_BUFFER))
+
+
+def run_workload(num_shards: int, duration: float = DURATION,
+                 actors: int = ACTORS, learners: int = LEARNERS):
+    """One trial: returns (ops, elapsed_s, table) for the fixed workload."""
+    table = make_replay_shards(_make_factory(), num_shards)
+    deadline = time.time() + duration
+
+    def actor():
+        while time.time() < deadline:
+            try:
+                table.insert(ITEM, timeout=0.5)
+            except RateLimiterTimeout:
+                pass
+
+    def learner():
+        while time.time() < deadline:
+            try:
+                table.sample(1, timeout=0.5)
+            except RateLimiterTimeout:
+                pass
+
+    threads = ([threading.Thread(target=actor) for _ in range(actors)]
+               + [threading.Thread(target=learner) for _ in range(learners)])
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.time() - t0
+    rl = table.rate_limiter
+    return rl.inserts + rl.samples, elapsed, table
+
+
+def check_spi_invariant(table) -> bool:
+    """§2.5 per-shard invariant: |samples - spi*(inserts - min_size)| stays
+    within the error buffer (+ in-flight slack of one op per worker)."""
+    shards = getattr(table, "shards", [table])
+    slack = ERROR_BUFFER + SPI * (ACTORS + LEARNERS)
+    for shard in shards:
+        rl = shard.rate_limiter
+        if rl.inserts <= rl.min_size_to_sample:
+            continue
+        deficit = rl.samples - SPI * (rl.inserts - rl.min_size_to_sample)
+        if abs(deficit) > slack:
+            return False
+    return True
+
+
+def main(smoke: bool = False):
+    duration = 0.2 if smoke else DURATION
+    trials = 1 if smoke else TRIALS
+    shard_counts = (1, 4) if smoke else SHARD_COUNTS
+    ops = {n: 0 for n in shard_counts}
+    wall = {n: 0.0 for n in shard_counts}
+    invariant = {n: True for n in shard_counts}
+    # interleave trials across shard counts so scheduler drift hits all
+    # configurations equally
+    for _ in range(trials):
+        for n in shard_counts:
+            count, elapsed, table = run_workload(n, duration=duration)
+            ops[n] += count
+            wall[n] += elapsed
+            invariant[n] &= check_spi_invariant(table)
+    throughput = {}
+    for n in shard_counts:
+        throughput[n] = ops[n] / wall[n]
+        csv_row(f"fig13/shards{n}/ops_per_sec", round(throughput[n]))
+        csv_row(f"fig13/shards{n}/spi_invariant_held", int(invariant[n]))
+        if not smoke:
+            assert invariant[n], f"per-shard SPI invariant violated, {n} shards"
+    speedup = throughput[shard_counts[-1]] / max(throughput[1], 1e-9)
+    csv_row(f"fig13/speedup_{shard_counts[-1]}x_vs_1", round(speedup, 2),
+            "claim: >= 2x at 4 shards")
+    if not smoke:
+        assert speedup >= 2.0, (
+            f"sharding speedup {speedup:.2f}x < 2x acceptance threshold")
+    return throughput
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -20,6 +20,7 @@ SECTIONS = [
     ("fig10", "benchmarks.fig10_bsuite"),
     ("fig11", "benchmarks.fig11_demos"),
     ("fig12", "benchmarks.fig12_offline"),
+    ("fig13", "benchmarks.fig13_replay_sharding"),
 ]
 
 

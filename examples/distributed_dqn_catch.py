@@ -1,8 +1,10 @@
 """Distributed agent (Fig 4 of the paper): N actor nodes + a learner node +
-a rate-limited replay table, launched on a Launchpad-lite program graph —
+a rate-limited replay service, launched on a Launchpad-lite program graph —
 from the SAME ExperimentConfig a single-process run would use.
 
   PYTHONPATH=src python examples/distributed_dqn_catch.py --actors 4
+  PYTHONPATH=src python examples/distributed_dqn_catch.py \
+      --actors 4 --replay-shards 4 --prefetch 4   # sharded replay service
 """
 import argparse
 
@@ -15,6 +17,10 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--actors", type=int, default=4)
     p.add_argument("--actor-steps", type=int, default=6000)
+    p.add_argument("--replay-shards", type=int, default=1,
+                   help="replay shards (one replay node per shard)")
+    p.add_argument("--prefetch", type=int, default=0,
+                   help="learner prefetch queue depth in batches")
     args = p.parse_args()
 
     cfg = DQNConfig(min_replay_size=100, samples_per_insert=8.0,
@@ -25,9 +31,13 @@ def main():
         seed=0,
         max_actor_steps=args.actor_steps,
         eval_episodes=30,
+        num_replay_shards=args.replay_shards,
+        prefetch_size=args.prefetch,
     )
-    print(f"launching: {args.actors} actors + learner + replay "
-          f"(SPI target {cfg.samples_per_insert})")
+    print(f"launching: {args.actors} actors + learner + replay"
+          f"[{args.replay_shards} shard(s)] "
+          f"(SPI target {cfg.samples_per_insert}, "
+          f"prefetch {args.prefetch})")
     result = run_distributed_experiment(config, num_actors=args.actors,
                                         timeout_s=300)
 
@@ -37,6 +47,10 @@ def main():
           f"inserts={ex['inserts']} samples={ex['samples']} "
           f"spi_effective={ex['spi_effective']:.1f}")
     print(f"eval return over 30 episodes: {result.final_eval_return:+.2f}")
+    if "replay" in ex:
+        for shard in ex["replay"]["per_shard"]:
+            print(f"  {shard['name']}: size={shard['size']} "
+                  f"inserts={shard['inserts']} samples={shard['samples']}")
 
 
 if __name__ == "__main__":

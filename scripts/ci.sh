@@ -19,6 +19,10 @@ if [[ -z "${SKIP_TESTS:-}" ]]; then
     python -m pytest -q
 fi
 
+echo "[ci] smoke: replay sharding throughput (fig13 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig13_replay_sharding.py --smoke
+
 echo "[ci] smoke: DQN on Catch via repro.experiments.run_experiment"
 python - <<'EOF'
 import time

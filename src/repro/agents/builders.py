@@ -16,12 +16,33 @@ from typing import Optional
 from repro.builders import AgentBuilder
 from repro.core import Agent, Counter, EnvironmentLoop, VariableClient
 from repro.distributed.program import LocalLauncher, Program
+from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
 
 
-def make_agent(builder: AgentBuilder, seed: int = 0) -> Agent:
-    """Synchronous single-process agent: actor and learner in lockstep."""
+def _resolve(explicit, default):
+    return default if explicit is None else explicit
+
+
+def _effective_shards(options, num_replay_shards):
+    """Offline builders preload their fixed dataset in make_replay —
+    sharding would duplicate it per shard (and there is no insert
+    throughput to scale), so they always keep a single table."""
+    if options.offline:
+        return 1
+    return _resolve(num_replay_shards, options.num_replay_shards)
+
+
+def make_agent(builder: AgentBuilder, seed: int = 0,
+               num_replay_shards: Optional[int] = None) -> Agent:
+    """Synchronous single-process agent: actor and learner in lockstep.
+
+    Sharded replay is honoured here too; prefetching is not — the lockstep
+    schedule relies on sampling (and its rate-limiter accounting) happening
+    synchronously inside the learner step.
+    """
     options = builder.options
-    table = builder.make_replay()
+    num_shards = _effective_shards(options, num_replay_shards)
+    table = make_replay_shards(builder.make_replay, num_shards)
     adder = builder.make_adder(table)
     iterator = builder.make_dataset(table)
     learner = builder.make_learner(
@@ -100,16 +121,23 @@ class _ActorWorker:
 class DistributedAgent:
     """Handle onto a launched distributed program."""
 
-    def __init__(self, program, launcher, learner, table, counter):
+    def __init__(self, program, launcher, learner, table, counter,
+                 dataset=None):
         self.program = program
         self.launcher = launcher
         self.learner = learner
         self.table = table
         self.counter = counter
+        self.dataset = dataset
 
     def stop(self):
-        self.table.stop()
+        # launcher first: it marks the shutdown as user-initiated (so late
+        # rate-limiter wakeups are noise, not worker errors) and stops every
+        # node, including the replay shards.
         self.launcher.stop()
+        self.table.stop()
+        if self.dataset is not None and hasattr(self.dataset, "stop"):
+            self.dataset.stop()
         self.launcher.join(timeout=10)
 
 
@@ -143,18 +171,38 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            num_actors: int,
                            seed: int = 0,
                            max_learner_steps: Optional[int] = None,
-                           with_evaluator: bool = False) -> DistributedAgent:
+                           with_evaluator: bool = False,
+                           num_replay_shards: Optional[int] = None,
+                           prefetch_size: Optional[int] = None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
-    on a Launchpad-lite graph — Fig 4 of the paper."""
+    on a Launchpad-lite graph — Fig 4 of the paper.
+
+    With ``num_replay_shards > 1`` the replay service is a ``ShardedReplay``
+    built from the builder's own ``make_replay`` — one replay node per shard
+    is placed in the program graph.  With ``prefetch_size > 0`` the learner
+    consumes batches through a ``PrefetchingDataset`` instead of the
+    synchronous dataset.  Both default to the builder's ``BuilderOptions``.
+    """
     program = Program("distributed_agent")
     counter = Counter()
+    options = builder.options
+    num_shards = _effective_shards(options, num_replay_shards)
+    prefetch = _resolve(prefetch_size, options.prefetch_size)
 
-    table = builder.make_replay()
+    table = make_replay_shards(builder.make_replay, num_shards)
     iterator = builder.make_dataset(table)
+    if prefetch > 0:
+        iterator = PrefetchingDataset.over_iterator(iterator,
+                                                    prefetch_size=prefetch)
     learner = builder.make_learner(
         iterator, priority_update_cb=table.update_priorities)
     worker = _LearnerWorker(learner, max_steps=max_learner_steps)
 
+    # replay placement: one node per shard (what a multi-host launcher would
+    # schedule onto separate replay servers), plus the routing front-end.
+    if isinstance(table, ShardedReplay):
+        for i, shard in enumerate(table.shards):
+            program.add_node(f"replay/shard_{i}", lambda s=shard: s)
     program.add_node("replay", lambda: table)
     learner_handle = program.add_node("learner", lambda: worker,
                                       is_worker=True)
@@ -168,7 +216,8 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                          is_worker=True)
 
     launcher = LocalLauncher(program).launch()
-    agent = DistributedAgent(program, launcher, learner, table, counter)
+    agent = DistributedAgent(program, launcher, learner, table, counter,
+                             dataset=iterator if prefetch > 0 else None)
     if with_evaluator:
         agent.evaluator = program.resolve("evaluator")
     return agent

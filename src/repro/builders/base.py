@@ -43,6 +43,12 @@ class BuilderOptions:
         whether a consuming (queue) dataset can serve a full batch.
     offline: the builder learns from a fixed dataset; it has no adder and
         its actors never feed replay (§2.6).
+    num_replay_shards: replay shards the execution layer builds from
+        ``make_replay`` (1 = single table; >1 = ``ShardedReplay`` with one
+        full table + selector + rate limiter per shard).
+    prefetch_size: learner-side prefetch queue depth in batches (0 = the
+        synchronous dataset; >0 wraps it in a ``PrefetchingDataset`` on the
+        distributed learner hot path).
     """
 
     variable_update_period: int = 10
@@ -50,6 +56,8 @@ class BuilderOptions:
     observations_per_step: float = 1.0
     batch_size: int = 1
     offline: bool = False
+    num_replay_shards: int = 1
+    prefetch_size: int = 0
 
     def __post_init__(self):
         if self.variable_update_period < 1:
@@ -65,6 +73,13 @@ class BuilderOptions:
                 f"{self.observations_per_step}")
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.num_replay_shards < 1:
+            raise ValueError(
+                f"num_replay_shards must be >= 1, got "
+                f"{self.num_replay_shards}")
+        if self.prefetch_size < 0:
+            raise ValueError(
+                f"prefetch_size must be >= 0, got {self.prefetch_size}")
 
 
 class AgentBuilder(abc.ABC):

@@ -90,13 +90,21 @@ class Program:
 
 
 class LocalLauncher:
-    """Run worker nodes on threads (the single-machine Launchpad backend)."""
+    """Run worker nodes on threads (the single-machine Launchpad backend).
+
+    Fail-fast: the first worker exception stops every sibling node instead of
+    letting them spin until an external timeout.  Errors raised *after* the
+    user requested shutdown — and rate-limiter wakeups caused by stopping the
+    replay tables — are shutdown noise, not failures, and are suppressed.
+    """
 
     def __init__(self, program: Program):
         self.program = program
         self.threads: List[threading.Thread] = []
         self._stop = threading.Event()
+        self._user_stopped = False
         self._errors: List[BaseException] = []
+        self._errors_lock = threading.Lock()
 
     def launch(self):
         # construct everything first (resolves the graph edges)
@@ -116,14 +124,25 @@ class LocalLauncher:
             node.instance.run()
         except StopIteration:
             pass
-        except Exception as e:  # pragma: no cover
-            if not self._stop.is_set():
+        except Exception as e:
+            from repro.replay.rate_limiter import RateLimiterTimeout
+            # Once a stop is in flight (user- or fail-fast-initiated — the
+            # flag is always set before any table is stopped), rate-limiter
+            # wakeups are shutdown noise, as is anything raised after the
+            # user asked us to shut down.  A "stopped" error with no stop in
+            # flight is a real worker death and must be surfaced.
+            if self._stop.is_set() and (self._user_stopped
+                                        or isinstance(e, RateLimiterTimeout)):
+                return
+            with self._errors_lock:
                 self._errors.append(e)
+            # fail fast: stop the siblings so join() returns promptly
+            self._initiate_stop()
 
     def should_stop(self) -> bool:
         return self._stop.is_set()
 
-    def stop(self):
+    def _initiate_stop(self):
         self._stop.set()
         for node in self.program.nodes:
             inst = node.instance
@@ -133,12 +152,18 @@ class LocalLauncher:
                 except Exception:
                     pass
 
+    def stop(self):
+        self._user_stopped = True
+        self._initiate_stop()
+
     def join(self, timeout: Optional[float] = None):
         deadline = None if timeout is None else time.time() + timeout
         for t in self.threads:
             remaining = None if deadline is None else max(deadline - time.time(), 0)
             t.join(remaining)
-        if len(self._errors) == 1:
-            raise self._errors[0]
-        if self._errors:
-            raise WorkerErrors(self._errors)
+        with self._errors_lock:
+            errors = list(self._errors)
+        if len(errors) == 1:
+            raise errors[0]
+        if errors:
+            raise WorkerErrors(errors)

@@ -34,6 +34,13 @@ class ExperimentConfig:
     checkpoint_every: learner steps between checkpoints (0 = only final).
     eval_every: run an eval pass every N training episodes (0 = only final).
     eval_episodes: episodes per eval pass.
+    num_replay_shards: replay shards built from the builder's
+        ``make_replay`` (None = defer to the builder's options; >1 = a
+        ``ShardedReplay`` service, one replay node per shard in the
+        distributed program graph).
+    prefetch_size: learner prefetch queue depth in batches (None = defer to
+        the builder's options; >0 = a ``PrefetchingDataset`` on the
+        distributed learner hot path).
     """
 
     builder_factory: BuilderFactory
@@ -46,6 +53,8 @@ class ExperimentConfig:
     checkpoint_every: int = 0
     eval_every: int = 0
     eval_episodes: int = 10
+    num_replay_shards: Optional[int] = None
+    prefetch_size: Optional[int] = None
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -56,6 +65,12 @@ class ExperimentConfig:
         if self.checkpoint_every < 0:
             raise ValueError(f"checkpoint_every must be >= 0, "
                              f"got {self.checkpoint_every}")
+        if self.num_replay_shards is not None and self.num_replay_shards < 1:
+            raise ValueError(f"num_replay_shards must be >= 1, "
+                             f"got {self.num_replay_shards}")
+        if self.prefetch_size is not None and self.prefetch_size < 0:
+            raise ValueError(f"prefetch_size must be >= 0, "
+                             f"got {self.prefetch_size}")
 
 
 @dataclasses.dataclass

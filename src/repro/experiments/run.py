@@ -53,7 +53,8 @@ def run_experiment(config: ExperimentConfig,
     env = config.environment_factory(config.seed)
     spec = make_environment_spec(env)
     builder = config.builder_factory(spec)
-    agent = make_agent(builder, seed=config.seed)
+    agent = make_agent(builder, seed=config.seed,
+                       num_replay_shards=config.num_replay_shards)
     counter = Counter()
     logger = (config.logger_factory("train")
               if config.logger_factory else None)
@@ -116,7 +117,9 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
               else max_actor_steps)
     dist = make_distributed_agent(builder, config.environment_factory,
                                   num_actors=num_actors, seed=config.seed,
-                                  with_evaluator=with_evaluator)
+                                  with_evaluator=with_evaluator,
+                                  num_replay_shards=config.num_replay_shards,
+                                  prefetch_size=config.prefetch_size)
     checkpointer = _make_checkpointer(config)
     t0 = time.time()
     try:
@@ -136,6 +139,8 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                 rl.inserts - rl.min_size_to_sample, 1),
             "walltime": time.time() - t0,
         }
+        if hasattr(dist.table, "stats"):   # ShardedReplay: per-shard view
+            extras["replay"] = dist.table.stats()
         if with_evaluator:
             extras["evaluator_returns"] = list(dist.evaluator.returns)
     finally:

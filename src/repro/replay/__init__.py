@@ -1,4 +1,8 @@
-from repro.replay.dataset import ReplaySample, SampleInfo, as_iterator, dataset_from_list  # noqa: F401
+from repro.replay.dataset import (ReplaySample, SampleInfo, as_iterator,  # noqa: F401
+                                  batch_from_samples, dataset_from_list)
+from repro.replay.prefetch import PrefetchingDataset  # noqa: F401
 from repro.replay.rate_limiter import MinSize, RateLimiter, RateLimiterTimeout, SampleToInsertRatio  # noqa: F401
 from repro.replay.selectors import Fifo, Lifo, Prioritized, Uniform  # noqa: F401
+from repro.replay.service import (AggregateRateLimiter, ShardedReplay,  # noqa: F401
+                                  make_replay_shards)
 from repro.replay.table import Table  # noqa: F401

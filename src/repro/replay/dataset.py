@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import Any, Iterator, NamedTuple
 
+import jax
 import numpy as np
 
 from repro.replay.table import Table
@@ -24,18 +25,21 @@ class ReplaySample(NamedTuple):
 
 
 def _stack(items):
-    import jax
     return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *items)
+
+
+def batch_from_samples(sampled) -> ReplaySample:
+    """Assemble ``[(Item, prob), ...]`` into one stacked ReplaySample."""
+    items = [it.data for it, _ in sampled]
+    keys = np.array([it.key for it, _ in sampled], np.int64)
+    probs = np.array([p for _, p in sampled], np.float64)
+    return ReplaySample(SampleInfo(keys, probs), _stack(items))
 
 
 def as_iterator(table: Table, batch_size: int,
                 timeout: float = None) -> Iterator[ReplaySample]:
     while True:
-        sampled = table.sample(batch_size, timeout=timeout)
-        items = [it.data for it, _ in sampled]
-        keys = np.array([it.key for it, _ in sampled], np.int64)
-        probs = np.array([p for _, p in sampled], np.float64)
-        yield ReplaySample(SampleInfo(keys, probs), _stack(items))
+        yield batch_from_samples(table.sample(batch_size, timeout=timeout))
 
 
 def dataset_from_list(items, batch_size: int, *, seed: int = 0,

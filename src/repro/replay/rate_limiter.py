@@ -39,6 +39,10 @@ class RateLimiter:
     def samples(self) -> int:
         return self._samples
 
+    @property
+    def stopped(self) -> bool:
+        return self._stopped
+
     def stop(self):
         with self._lock:
             self._stopped = True
@@ -57,7 +61,16 @@ class RateLimiter:
             if not self._lock.wait_for(
                     lambda: self._can_insert() or self._stopped, timeout):
                 raise RateLimiterTimeout("insert blocked past timeout")
+            if self._stopped and not self._can_insert():
+                raise RateLimiterTimeout("stopped")
             self._inserts += 1
+            self._lock.notify_all()
+
+    def rollback_sample(self):
+        """Un-count one admitted sample: the table had no item to serve (a
+        consuming selector drained it between admission and the draw)."""
+        with self._lock:
+            self._samples -= 1
             self._lock.notify_all()
 
     def await_can_sample(self, timeout: Optional[float] = None):

@@ -1,0 +1,209 @@
+"""Sharded replay service (§2.4–§2.5 scaled out).
+
+The paper's scaling story is that replay is a *service*: actors and learners
+scale independently because they only ever talk to a rate-limited storage
+layer.  A single ``Table`` serializes every insert, sample, and priority
+update through one lock and one condition variable — the bottleneck every
+distributed run funnels through.  ``ShardedReplay`` horizontally shards that
+service: N full tables (each with its own selector and ``RateLimiter``),
+constructed from the *same* ``builder.make_replay()`` factory so every
+registered builder works unchanged.
+
+Design:
+
+- **Insert routing** — round-robin (default) or a multiplicative hash of the
+  insert ticket; both keep shards balanced so per-shard ``min_size_to_sample``
+  thresholds are reached together.
+- **Shard-id-encoded keys** — the global key of an item stored in shard ``i``
+  with local key ``k`` is ``k * num_shards + i``; ``update_priorities`` can
+  therefore route each key back to its owning shard without any lookup table.
+- **Interleaved sampling** — a batch is drawn one item at a time from the
+  shards in rotating round-robin order, i.e. the sampling distribution is a
+  uniform mixture over shards; reported probabilities are scaled by
+  ``1/num_shards`` accordingly.
+- **Per-shard rate limiting** — each shard keeps its own ``RateLimiter``, so
+  the §2.5 SPI invariant holds *per shard* (and thus in aggregate); the
+  ``rate_limiter`` property is an aggregated read view whose ``inserts`` /
+  ``samples`` / ``min_size_to_sample`` sum across shards.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.replay.table import Item, Table
+
+# Knuth's multiplicative hash constant: decorrelates consecutive tickets.
+_HASH_MULT = 2654435761
+
+
+class AggregateRateLimiter:
+    """Read-mostly view over the shards' limiters.
+
+    Quacks like a ``RateLimiter`` for the stats and control surface the
+    execution layers use (``inserts``/``samples``/``min_size_to_sample``/
+    ``would_block_*``/``stop``); blocking itself stays per shard.
+    """
+
+    def __init__(self, shards: Sequence[Table]):
+        self._shards = list(shards)
+
+    @property
+    def inserts(self) -> int:
+        return sum(s.rate_limiter.inserts for s in self._shards)
+
+    @property
+    def samples(self) -> int:
+        return sum(s.rate_limiter.samples for s in self._shards)
+
+    @property
+    def min_size_to_sample(self) -> int:
+        return sum(s.rate_limiter.min_size_to_sample for s in self._shards)
+
+    @property
+    def stopped(self) -> bool:
+        return any(s.rate_limiter.stopped for s in self._shards)
+
+    def would_block_insert(self) -> bool:
+        return any(s.rate_limiter.would_block_insert() for s in self._shards)
+
+    def would_block_sample(self) -> bool:
+        return any(s.rate_limiter.would_block_sample() for s in self._shards)
+
+    def stop(self):
+        for s in self._shards:
+            s.rate_limiter.stop()
+
+
+class ShardedReplay:
+    """N replay shards behind the single-table interface.
+
+    Drop-in for ``Table`` everywhere the execution layers touch replay:
+    ``insert`` / ``sample`` / ``update_priorities`` / ``size`` / ``stop``,
+    plus the ``selector`` / ``rate_limiter`` attributes that
+    ``repro.agents.builders`` reads.  Construct via ``from_factory`` with the
+    builder's own ``make_replay`` so sharding needs no per-agent code.
+    """
+
+    def __init__(self, shards: Sequence[Table], name: str = "sharded_replay",
+                 routing: str = "round_robin"):
+        if not shards:
+            raise ValueError("ShardedReplay needs at least one shard")
+        if routing not in ("round_robin", "hash"):
+            raise ValueError(f"unknown routing {routing!r}")
+        self.name = name
+        self.shards: List[Table] = list(shards)
+        self.num_shards = len(self.shards)
+        self.routing = routing
+        self.capacity = sum(s.capacity for s in self.shards)
+        self.rate_limiter = AggregateRateLimiter(self.shards)
+        # itertools.count is C-implemented, so next() is atomic under the
+        # GIL — contention-free tickets for insert routing.
+        self._insert_ticket = itertools.count()
+        self._sample_ticket = itertools.count()
+
+    @classmethod
+    def from_factory(cls, make_replay: Callable[[], Table], num_shards: int,
+                     routing: str = "round_robin") -> "ShardedReplay":
+        """Build N shards from a builder's ``make_replay`` factory."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        shards = [make_replay() for _ in range(num_shards)]
+        for i, shard in enumerate(shards):
+            shard.name = f"{shard.name}/shard_{i}"
+            # One factory means identical selector RNG streams; under the
+            # lockstep sample rotation that would correlate cross-shard
+            # draws (each shard picking the same position each round), so
+            # give every shard a distinct deterministic stream.
+            rng = getattr(shard.selector, "_rng", None)
+            if rng is not None and i:
+                rng.seed((i + 1) * _HASH_MULT)
+        return cls(shards, name=f"sharded[{num_shards}]", routing=routing)
+
+    # ------------------------------------------------------------ routing
+    def _route(self) -> int:
+        ticket = next(self._insert_ticket)
+        if self.routing == "hash":
+            return ((ticket * _HASH_MULT) >> 7) % self.num_shards
+        return ticket % self.num_shards
+
+    def shard_of(self, global_key: int) -> int:
+        return global_key % self.num_shards
+
+    def _global_key(self, local_key: int, shard_idx: int) -> int:
+        return local_key * self.num_shards + shard_idx
+
+    # ------------------------------------------------------------ table api
+    @property
+    def selector(self):
+        # Shards are homogeneous (one factory); expose shard 0's selector for
+        # the ``consumes`` probe the synchronous agent loop performs.
+        return self.shards[0].selector
+
+    def insert(self, data, priority: float = 1.0,
+               timeout: Optional[float] = None) -> int:
+        idx = self._route()
+        local_key = self.shards[idx].insert(data, priority, timeout=timeout)
+        return self._global_key(local_key, idx)
+
+    def sample(self, batch_size: int = 1,
+               timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
+        """Interleaved cross-shard sampling: item j of the batch comes from
+        shard (cursor + j) % N, each drawn under that shard's own limiter."""
+        start = next(self._sample_ticket)
+        out: List[Tuple[Item, float]] = []
+        for j in range(batch_size):
+            idx = (start + j) % self.num_shards
+            (item, prob), = self.shards[idx].sample(1, timeout=timeout)
+            out.append((Item(self._global_key(item.key, idx), item.data,
+                             item.priority), prob / self.num_shards))
+        return out
+
+    def update_priorities(self, keys: Sequence[int],
+                          priorities: Sequence[float]):
+        by_shard: Dict[int, Tuple[List[int], List[float]]] = {}
+        for key, priority in zip(keys, priorities):
+            local, idx = divmod(int(key), self.num_shards)
+            ks, ps = by_shard.setdefault(idx, ([], []))
+            ks.append(local)
+            ps.append(priority)
+        for idx, (ks, ps) in by_shard.items():
+            self.shards[idx].update_priorities(ks, ps)
+
+    def size(self) -> int:
+        return sum(s.size() for s in self.shards)
+
+    @property
+    def stopped(self) -> bool:
+        return self.rate_limiter.stopped
+
+    def stop(self):
+        for s in self.shards:
+            s.stop()
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict:
+        """Aggregated inserts/samples/size plus the per-shard breakdown the
+        §2.5 invariant is checked against."""
+        per_shard = []
+        for s in self.shards:
+            rl = s.rate_limiter
+            per_shard.append({"name": s.name, "size": s.size(),
+                              "inserts": rl.inserts, "samples": rl.samples,
+                              "min_size_to_sample": rl.min_size_to_sample})
+        return {"num_shards": self.num_shards,
+                "size": self.size(),
+                "inserts": self.rate_limiter.inserts,
+                "samples": self.rate_limiter.samples,
+                "per_shard": per_shard}
+
+
+def make_replay_shards(make_replay: Callable[[], Table], num_shards: int,
+                       routing: str = "round_robin"):
+    """``num_shards <= 1`` keeps the plain single table (zero overhead);
+    otherwise returns a ``ShardedReplay`` over N factory-built shards."""
+    if num_shards <= 1:
+        return make_replay()
+    return ShardedReplay.from_factory(make_replay, num_shards,
+                                      routing=routing)

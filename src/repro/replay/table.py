@@ -8,11 +8,14 @@ insert and sample paths, reproducing §2.5's blocking behaviour.
 from __future__ import annotations
 
 import threading
+import time
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.replay.rate_limiter import RateLimiter, MinSize
+from repro.replay.rate_limiter import (RateLimiter, RateLimiterTimeout,
+                                       MinSize)
 from repro.replay.selectors import Selector, Uniform
 
 
@@ -35,7 +38,11 @@ class Table:
         self.rate_limiter = rate_limiter or MinSize(1)
         self._lock = threading.Lock()
         self._items: Dict[int, Item] = {}
-        self._order: List[int] = []          # insertion order for FIFO removal
+        # Insertion order for FIFO removal.  An OrderedDict (a doubly linked
+        # list underneath) gives O(1) pop-oldest on eviction and O(1) removal
+        # of arbitrary keys for consuming selectors, where a plain list was
+        # O(n) per operation at full capacity.
+        self._order: "OrderedDict[int, None]" = OrderedDict()
         self._next_key = 0
 
     # ------------------------------------------------------------ insert
@@ -46,10 +53,10 @@ class Table:
             key = self._next_key
             self._next_key += 1
             self._items[key] = Item(key, data, priority)
-            self._order.append(key)
+            self._order[key] = None
             self.selector.insert(key, priority)
             while len(self._order) > self.capacity:
-                evict = self._order.pop(0)
+                evict, _ = self._order.popitem(last=False)
                 self._items.pop(evict, None)
                 self.selector.remove(evict)
             return key
@@ -59,18 +66,31 @@ class Table:
                timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
         """Returns [(item, importance_weight_probability), ...]."""
         out = []
+        deadline = None if timeout is None else time.time() + timeout
         for _ in range(batch_size):
-            self.rate_limiter.await_can_sample(timeout)
-            with self._lock:
-                key, prob = self.selector.sample()
-                item = self._items[key]
-                out.append((item, prob))
-                if getattr(self.selector, "consumes", False):
-                    self._items.pop(key, None)
+            while True:
+                remaining = (None if deadline is None
+                             else max(deadline - time.time(), 0.0))
+                self.rate_limiter.await_can_sample(remaining)
+                with self._lock:
                     try:
-                        self._order.remove(key)
-                    except ValueError:
-                        pass
+                        key, prob = self.selector.sample()
+                    except IndexError:
+                        key = None   # admitted, but the table is empty
+                    else:
+                        out.append((self._items[key], prob))
+                        if getattr(self.selector, "consumes", False):
+                            self._items.pop(key, None)
+                            self._order.pop(key, None)
+                if key is not None:
+                    break
+                # The limiter admits on cumulative inserts, but a consuming
+                # selector may have drained the table: un-count the sample
+                # and wait for the next insert instead of crashing.
+                self.rate_limiter.rollback_sample()
+                if deadline is not None and time.time() >= deadline:
+                    raise RateLimiterTimeout("sample blocked past timeout")
+                time.sleep(0.001)
         return out
 
     def update_priorities(self, keys: Sequence[int], priorities: Sequence[float]):
@@ -83,6 +103,10 @@ class Table:
     def size(self) -> int:
         with self._lock:
             return len(self._order)
+
+    @property
+    def stopped(self) -> bool:
+        return self.rate_limiter.stopped
 
     def stop(self):
         self.rate_limiter.stop()
