@@ -21,6 +21,7 @@ SECTIONS = [
     ("fig11", "benchmarks.fig11_demos"),
     ("fig12", "benchmarks.fig12_offline"),
     ("fig13", "benchmarks.fig13_replay_sharding"),
+    ("fig14", "benchmarks.fig14_actor_scaling"),
 ]
 
 

@@ -1,16 +1,32 @@
 """Distributed agent (Fig 4 of the paper): N actor nodes + a learner node +
 a rate-limited replay service, launched on a Launchpad-lite program graph —
-from the SAME ExperimentConfig a single-process run would use.
+from the SAME ExperimentConfig a single-process run would use.  The
+execution backend is a config field: ``--launcher multiprocess`` places each
+actor in its own OS process with courier RPC edges, no other change.
 
   PYTHONPATH=src python examples/distributed_dqn_catch.py --actors 4
   PYTHONPATH=src python examples/distributed_dqn_catch.py \
       --actors 4 --replay-shards 4 --prefetch 4   # sharded replay service
+  PYTHONPATH=src python examples/distributed_dqn_catch.py \
+      --actors 4 --launcher multiprocess          # one process per actor
+
+Factories are module-level (not lambdas): process-crossing backends pickle
+them into the spawned actor processes.
 """
 import argparse
+import functools
 
 from repro.agents.dqn import DQNBuilder, DQNConfig
 from repro.envs import Catch
 from repro.experiments import ExperimentConfig, run_distributed_experiment
+
+
+def make_builder(spec, cfg: DQNConfig):
+    return DQNBuilder(spec, cfg, seed=0)
+
+
+def make_env(seed: int):
+    return Catch(seed=seed)
 
 
 def main():
@@ -21,21 +37,26 @@ def main():
                    help="replay shards (one replay node per shard)")
     p.add_argument("--prefetch", type=int, default=0,
                    help="learner prefetch queue depth in batches")
+    p.add_argument("--launcher", default="local",
+                   choices=["local", "multiprocess"],
+                   help="execution backend: threads, or one OS process "
+                        "per actor with courier RPC edges")
     args = p.parse_args()
 
     cfg = DQNConfig(min_replay_size=100, samples_per_insert=8.0,
                     batch_size=32, n_step=1, epsilon=0.15)
     config = ExperimentConfig(
-        builder_factory=lambda spec: DQNBuilder(spec, cfg, seed=0),
-        environment_factory=lambda seed: Catch(seed=seed),
+        builder_factory=functools.partial(make_builder, cfg=cfg),
+        environment_factory=make_env,
         seed=0,
         max_actor_steps=args.actor_steps,
         eval_episodes=30,
         num_replay_shards=args.replay_shards,
         prefetch_size=args.prefetch,
+        launcher=args.launcher,
     )
-    print(f"launching: {args.actors} actors + learner + replay"
-          f"[{args.replay_shards} shard(s)] "
+    print(f"launching [{args.launcher}]: {args.actors} actors + learner "
+          f"+ replay[{args.replay_shards} shard(s)] "
           f"(SPI target {cfg.samples_per_insert}, "
           f"prefetch {args.prefetch})")
     result = run_distributed_experiment(config, num_actors=args.actors,

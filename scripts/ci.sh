@@ -23,6 +23,14 @@ echo "[ci] smoke: replay sharding throughput (fig13 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig13_replay_sharding.py --smoke
 
+echo "[ci] smoke: actor scaling, local + multiprocess backends (fig14 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig14_actor_scaling.py --smoke
+
+echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
+# a real file, not a stdin heredoc: spawn children re-import __main__
+python scripts/smoke_multiprocess.py
+
 echo "[ci] smoke: DQN on Catch via repro.experiments.run_experiment"
 python - <<'EOF'
 import time

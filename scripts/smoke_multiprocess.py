@@ -1,0 +1,42 @@
+"""CI smoke: the multiprocess launcher trains DQN on Catch over courier.
+
+A real file (not a stdin heredoc) because the spawn context re-imports
+``__main__`` in every child — factories must live at module level and the
+driver must be guarded by ``__name__ == "__main__"``.
+"""
+import time
+
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_distributed_experiment
+
+
+def builder_factory(spec):
+    return DQNBuilder(spec, DQNConfig(min_replay_size=50,
+                                      samples_per_insert=4.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def env_factory(seed):
+    return Catch(seed=seed)
+
+
+def main():
+    t0 = time.time()
+    config = ExperimentConfig(builder_factory=builder_factory,
+                              environment_factory=env_factory,
+                              seed=0, eval_episodes=0,
+                              launcher="multiprocess")
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=1500, timeout_s=180)
+    steps = int(result.counts.get("actor_steps", 0))
+    print(f"[ci] multiprocess smoke: {steps} actor steps across 2 "
+          f"processes, {result.learner_steps} learner steps, "
+          f"spi {result.extras['spi_effective']:.2f}, "
+          f"{time.time() - t0:.0f}s")
+    assert steps >= 1500, "actor processes never reached the step target"
+    assert result.learner_steps > 0, "learner never stepped"
+
+
+if __name__ == "__main__":
+    main()

@@ -3,20 +3,26 @@
 
 Builders implement the typed ``repro.builders.AgentBuilder`` contract; the
 execution schedule comes from their frozen ``BuilderOptions`` (no duck-typed
-attribute probing).  These two assembly functions are the low-level layer;
-``repro.experiments`` wraps them in the config-driven run API that examples,
-benchmarks, and tests use.
+attribute probing).  ``make_distributed_agent`` emits a backend-agnostic
+``Program``: replay shards, the counter, and the learner are *service* nodes
+(courier-servable), actors are a replicated *worker* pool — so the graph
+runs unchanged on the ``local`` (threads) or ``multiprocess`` (one OS
+process per worker, RPC edges) launcher backend.  These assembly functions
+are the low-level layer; ``repro.experiments`` wraps them in the
+config-driven run API that examples, benchmarks, and tests use.
 """
 from __future__ import annotations
 
 import itertools
 import threading
-from typing import Optional
+from typing import List, Optional
 
 from repro.builders import AgentBuilder
 from repro.core import Agent, Counter, EnvironmentLoop, VariableClient
-from repro.distributed.program import LocalLauncher, Program
+from repro.distributed.launchers import JoinTimeout, get_launcher
+from repro.distributed.program import Program, Replica
 from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
+from repro.replay.service import REPLAY_INTERFACE
 
 
 def _resolve(explicit, default):
@@ -64,9 +70,29 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                  can_step=can_step)
 
 
+class _DeferredBuilder:
+    """Picklable stand-in for an AgentBuilder: ships ``(factory, spec)``
+    across a process boundary and rebuilds the builder child-side (builder
+    instances may hold unpicklable state; their factories must not)."""
+
+    def __init__(self, factory, spec):
+        self.factory = factory
+        self.spec = spec
+
+    def build(self) -> AgentBuilder:
+        return self.factory(self.spec)
+
+
+def _builder_of(builder):
+    return builder.build() if isinstance(builder, _DeferredBuilder) \
+        else builder
+
+
 class _LearnerWorker:
-    """Learner node: run learner steps until stopped (rate limiter blocks us
-    when we get ahead of the actors — §2.5)."""
+    """Learner node: a service/worker hybrid — steps SGD until stopped
+    (the rate limiter blocks us when we get ahead of the actors, §2.5) and
+    serves ``get_variables`` to the actor pool (over courier when actors
+    live in other processes)."""
 
     def __init__(self, learner, max_steps: Optional[int] = None):
         self.learner = learner
@@ -94,10 +120,13 @@ class _LearnerWorker:
 
 
 class _ActorWorker:
-    """Actor node: its own environment instance + loop (Fig 4)."""
+    """Actor node: its own environment instance + loop (Fig 4).  Every
+    collaborator arrives as a handle (in-memory or courier RemoteHandle) —
+    this class cannot tell which backend it runs under."""
 
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None):
+        builder = _builder_of(builder)
         self.env = env_factory(seed)
         client = VariableClient(
             variable_source,
@@ -118,17 +147,70 @@ class _ActorWorker:
         self._stop.set()
 
 
+class ReturnsLog:
+    """Append-only episode-return log a remote evaluator reports into (the
+    parent cannot reach into a child process to read a plain list)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: List[float] = []
+
+    def append(self, value: float):
+        with self._lock:
+            self._items.append(float(value))
+
+    def items(self) -> List[float]:
+        with self._lock:
+            return list(self._items)
+
+
+class _EvaluatorWorker:
+    """Background evaluator (§4.2): an actor with NO adder that periodically
+    pulls weights and logs episode returns against learner steps."""
+
+    def __init__(self, env_factory, builder, variable_source, counter,
+                 seed: int, returns_log=None, period_s: float = 1.0):
+        builder = _builder_of(builder)
+        self.env = env_factory(seed)
+        client = VariableClient(variable_source, update_period=1)
+        actor = builder.make_actor(builder.make_policy(evaluation=True),
+                                   client, adder=None, seed=seed)
+        self.loop = EnvironmentLoop(self.env, actor, counter=counter,
+                                    label="evaluator", should_update=True)
+        self.period_s = period_s
+        self.returns: List[float] = []
+        self._log = returns_log
+        self._stop = threading.Event()
+
+    def run(self):
+        while not self._stop.is_set():
+            result = self.loop.run_episode()
+            self.returns.append(result["episode_return"])
+            if self._log is not None:
+                self._log.append(result["episode_return"])
+            self._stop.wait(self.period_s)
+
+    def stop(self):
+        self._stop.set()
+
+
 class DistributedAgent:
     """Handle onto a launched distributed program."""
 
     def __init__(self, program, launcher, learner, table, counter,
-                 dataset=None):
+                 dataset=None, eval_log=None):
         self.program = program
         self.launcher = launcher
         self.learner = learner
         self.table = table
         self.counter = counter
         self.dataset = dataset
+        self.eval_log = eval_log
+
+    def evaluator_returns(self) -> List[float]:
+        """Episode returns reported by the evaluator node (works for both
+        backends; the evaluator may live in another process)."""
+        return self.eval_log.items() if self.eval_log is not None else []
 
     def stop(self):
         # launcher first: it marks the shutdown as user-initiated (so late
@@ -138,33 +220,14 @@ class DistributedAgent:
         self.table.stop()
         if self.dataset is not None and hasattr(self.dataset, "stop"):
             self.dataset.stop()
-        self.launcher.join(timeout=10)
-
-
-class _EvaluatorWorker:
-    """Background evaluator (§4.2): an actor with NO adder that periodically
-    pulls weights and logs episode returns against learner steps."""
-
-    def __init__(self, env_factory, builder, variable_source, counter,
-                 seed: int, period_s: float = 1.0):
-        self.env = env_factory(seed)
-        client = VariableClient(variable_source, update_period=1)
-        actor = builder.make_actor(builder.make_policy(evaluation=True),
-                                   client, adder=None, seed=seed)
-        self.loop = EnvironmentLoop(self.env, actor, counter=counter,
-                                    label="evaluator", should_update=True)
-        self.period_s = period_s
-        self.returns = []
-        self._stop = threading.Event()
-
-    def run(self):
-        while not self._stop.is_set():
-            result = self.loop.run_episode()
-            self.returns.append(result["episode_return"])
-            self._stop.wait(self.period_s)
-
-    def stop(self):
-        self._stop.set()
+        try:
+            self.launcher.join(timeout=30)
+        except JoinTimeout as e:
+            # best-effort teardown (runs in the experiment's finally path):
+            # a straggler node must not destroy a fully computed result —
+            # real worker errors still propagate above.
+            import sys
+            print(f"[distributed] warning: {e}", file=sys.stderr)
 
 
 def make_distributed_agent(builder: AgentBuilder, env_factory,
@@ -173,18 +236,29 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            max_learner_steps: Optional[int] = None,
                            with_evaluator: bool = False,
                            num_replay_shards: Optional[int] = None,
-                           prefetch_size: Optional[int] = None) -> DistributedAgent:
+                           prefetch_size: Optional[int] = None,
+                           launcher: str = "local",
+                           builder_factory=None,
+                           spec=None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
 
+    ``launcher`` selects the execution backend from the registry
+    (``"local"`` threads / ``"multiprocess"`` one OS process per worker).
+    Backends that place workers out-of-process pickle the worker nodes; for
+    those, pass the (module-level, picklable) ``builder_factory`` + ``spec``
+    so each child rebuilds its own builder — the same factory
+    ``ExperimentConfig`` already carries.
+
     With ``num_replay_shards > 1`` the replay service is a ``ShardedReplay``
-    built from the builder's own ``make_replay`` — one replay node per shard
-    is placed in the program graph.  With ``prefetch_size > 0`` the learner
-    consumes batches through a ``PrefetchingDataset`` instead of the
-    synchronous dataset.  Both default to the builder's ``BuilderOptions``.
+    built from the builder's own ``make_replay`` — one replay *service* node
+    per shard is placed in the program graph (each independently courier-
+    addressable).  With ``prefetch_size > 0`` the learner consumes batches
+    through a ``PrefetchingDataset`` instead of the synchronous dataset.
+    Both default to the builder's ``BuilderOptions``.
     """
+    launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
-    counter = Counter()
     options = builder.options
     num_shards = _effective_shards(options, num_replay_shards)
     prefetch = _resolve(prefetch_size, options.prefetch_size)
@@ -198,26 +272,49 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
         iterator, priority_update_cb=table.update_priorities)
     worker = _LearnerWorker(learner, max_steps=max_learner_steps)
 
-    # replay placement: one node per shard (what a multi-host launcher would
-    # schedule onto separate replay servers), plus the routing front-end.
+    # What crosses into worker processes: a picklable builder stand-in when
+    # the backend needs one, the shared builder instance otherwise.
+    actor_builder = builder
+    if launcher_cls.requires_pickling and builder_factory is not None:
+        if spec is None:
+            spec = getattr(builder, "spec", None)
+        actor_builder = _DeferredBuilder(builder_factory, spec)
+
+    counter_handle = program.add_node(
+        "counter", Counter, role="service",
+        interface=("increment", "get_counts"))
+    # replay placement: one service node per shard (independently
+    # addressable — what a multi-host launcher would schedule onto separate
+    # replay servers), plus the routing front-end the adders talk to.
     if isinstance(table, ShardedReplay):
         for i, shard in enumerate(table.shards):
-            program.add_node(f"replay/shard_{i}", lambda s=shard: s)
-    program.add_node("replay", lambda: table)
+            program.add_node(f"replay/shard_{i}", lambda s=shard: s,
+                             role="service", interface=REPLAY_INTERFACE)
+    replay_handle = program.add_node("replay", lambda: table, role="service",
+                                     interface=REPLAY_INTERFACE)
     learner_handle = program.add_node("learner", lambda: worker,
-                                      is_worker=True)
-    for i in range(num_actors):
-        program.add_node(
-            f"actor_{i}", _ActorWorker, env_factory, builder, learner_handle,
-            counter, table, seed + 1000 * (i + 1), is_worker=True)
+                                      role="service",
+                                      interface=("get_variables",))
+    program.add_node(
+        "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
+        counter_handle, replay_handle,
+        Replica(lambda i: seed + 1000 * (i + 1)),
+        role="worker", num_replicas=num_actors)
+    eval_log_handle = None
     if with_evaluator:
-        program.add_node("evaluator", _EvaluatorWorker, env_factory, builder,
-                         learner_handle, counter, seed + 999_999,
-                         is_worker=True)
+        eval_log_handle = program.add_node(
+            "eval_log", ReturnsLog, role="service",
+            interface=("append", "items"))
+        program.add_node("evaluator", _EvaluatorWorker, env_factory,
+                         actor_builder, learner_handle, counter_handle,
+                         seed + 999_999, eval_log_handle, role="worker")
 
-    launcher = LocalLauncher(program).launch()
-    agent = DistributedAgent(program, launcher, learner, table, counter,
-                             dataset=iterator if prefetch > 0 else None)
-    if with_evaluator:
+    launched = launcher_cls(program).launch()
+    agent = DistributedAgent(program, launched, learner, table,
+                             program.resolve("counter"),
+                             dataset=iterator if prefetch > 0 else None,
+                             eval_log=(program.resolve("eval_log")
+                                       if with_evaluator else None))
+    if with_evaluator and program.node("evaluator").placement != "process":
         agent.evaluator = program.resolve("evaluator")
     return agent

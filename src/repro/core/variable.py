@@ -1,42 +1,67 @@
 """Variable distribution: the learner is a VariableSource; actors poll it
-through a VariableClient (Fig 4's proxy-actor pattern — pull, not push)."""
+through a VariableClient (Fig 4's proxy-actor pattern — pull, not push).
+
+The source may be the learner object itself, an in-memory program ``Handle``
+to it, or a courier ``RemoteHandle`` when the actor lives in another process
+— the client only ever calls ``get_variables`` and cannot tell the
+difference.  ``serve_variable_source`` is the one-liner that exports any
+``VariableSource`` over courier RPC.
+"""
 from __future__ import annotations
 
 import threading
-import time
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 from repro.core.interfaces import VariableSource
 
 
 class VariableClient:
-    def __init__(self, source: VariableSource, names: Sequence[str] = ("policy",),
+    def __init__(self, source, names: Sequence[str] = ("policy",),
                  update_period: int = 1):
         self._source = source
         self._names = tuple(names)
         self._period = max(int(update_period), 1)
         self._calls = 0
         self._params: Optional[List[Any]] = None
+        self._fresh = False
 
     @property
     def params(self):
         if self._params is None:
             self.update_and_wait()
+            # the fetch just happened — the next update() call is satisfied
+            # already and must not hit the source a second time.
+            self._fresh = True
         return self._params[0] if len(self._names) == 1 else self._params
 
     def update(self, wait: bool = False):
         """Poll the source every `update_period` calls (async in real Acme;
-        synchronous here — the call itself is cheap in-process)."""
+        synchronous here — over courier the call is a real RPC, so the
+        period is what bounds actor-side traffic)."""
         self._calls += 1
-        if wait or self._params is None or self._calls % self._period == 0:
+        if wait:
+            self.update_and_wait()
+            return
+        if self._fresh:
+            # params were just populated by the property accessor on this
+            # very step; skip the redundant initial re-fetch.
+            self._fresh = False
+            return
+        if self._params is None or self._calls % self._period == 0:
             self.update_and_wait()
 
     def update_and_wait(self):
         self._params = self._source.get_variables(self._names)
+        self._fresh = False
 
 
 class VariableServer(VariableSource):
-    """Thread-safe holder used by learners to publish weights."""
+    """Thread-safe holder used by learners to publish weights.
+
+    ``get_variables`` with empty/omitted ``names`` returns ALL published
+    variables (insertion order) — consistent with ``VariableClient``'s
+    named-subset requests, which always pass explicit names.
+    """
 
     def __init__(self, **named_vars):
         self._lock = threading.Lock()
@@ -51,3 +76,13 @@ class VariableServer(VariableSource):
             if not names:
                 names = list(self._vars)
             return [self._vars[n] for n in names]
+
+
+def serve_variable_source(source: VariableSource, name: str = "variables"):
+    """Export ``source`` over a courier server; returns ``(server, handle)``.
+
+    The handle is a picklable RPC stub restricted to ``get_variables`` —
+    hand it to actors in other processes as their ``VariableClient`` source.
+    """
+    from repro.distributed.courier import serve
+    return serve(source, interface=("get_variables",), name=name)

@@ -1,0 +1,14 @@
+"""Distributed execution (§2.4): Program graph + pluggable launchers.
+
+``program`` declares the graph (nodes, roles, replicas, RPC interfaces),
+``courier`` is the socket RPC layer its edges degrade to across process
+boundaries, and ``launchers`` holds the backend registry
+(``get_launcher("local" | "multiprocess")``).
+"""
+from repro.distributed.courier import (  # noqa: F401
+    RemoteError, RemoteHandle, Server, serve)
+from repro.distributed.launchers import (  # noqa: F401
+    JoinTimeout, Launcher, LauncherBase, LocalLauncher, MultiprocessLauncher,
+    WorkerErrors, get_launcher, register_launcher)
+from repro.distributed.program import (  # noqa: F401
+    Handle, Node, Program, Replica)

@@ -1,0 +1,353 @@
+"""Courier: a minimal socket RPC layer for program edges (§2.4).
+
+When a ``Program`` node crosses a process boundary its in-memory ``Handle``
+degrades to a ``RemoteHandle`` — same call syntax, but each method call is
+forwarded to a ``Server`` wrapping the real object in the parent process.
+
+Wire format (length-prefixed pickled frames, one request per response):
+
+    frame    := uint32 big-endian payload length | pickled payload
+    request  := (method_name: str, args: tuple, kwargs: dict)
+    response := ("ok", result) | ("error", exception)
+
+Errors re-raise in the caller with their original type when the exception
+pickles (so e.g. a ``RateLimiterTimeout`` raised inside a remote replay
+table is classified identically by local and remote callers); otherwise the
+caller gets a ``RemoteError`` carrying the formatted remote traceback.
+
+Servers enforce the node's declared ``interface`` (a method allowlist):
+moving a service out-of-process never widens what its clients may call.
+Connections are authenticated with an HMAC challenge (the unpickling server
+must not accept frames from arbitrary local processes — CWE-502): each
+``Server`` owns a random authkey, every accepted connection must answer
+``HMAC(authkey, nonce)`` before its first frame is read, and the key
+travels to legitimate clients only inside ``RemoteHandle`` pickles (process
+spawn payloads / control pipes), never over the socket.
+"""
+from __future__ import annotations
+
+import hmac
+import pickle
+import secrets
+import socket
+import struct
+import threading
+import traceback
+from typing import Any, Optional, Sequence, Tuple
+
+_LEN = struct.Struct(">I")
+_HOST = "127.0.0.1"
+_NONCE_BYTES = 16
+_DIGEST = "sha256"
+_DIGEST_BYTES = 32
+_AUTH_OK = b"OK"
+
+
+class CourierClosed(ConnectionError):
+    """The peer closed the connection (server stopped, or vice versa)."""
+
+
+class RemoteError(RuntimeError):
+    """A remote call failed and the original exception could not be pickled
+    back; carries the remote type name and formatted traceback."""
+
+
+def picklable_error(e: BaseException) -> BaseException:
+    """Return ``e`` if it survives a pickle ROUND-TRIP (dumps alone is not
+    enough: multi-arg ``__init__`` exceptions dump fine but explode on
+    loads), else a ``RemoteError`` carrying the formatted traceback.  Shared
+    by the courier server and the launcher child error queue so both ship
+    identically-shaped errors."""
+    try:
+        pickle.loads(pickle.dumps(e))
+        return e
+    except Exception:
+        return RemoteError(f"{type(e).__name__}: {e}\n"
+                           f"--- remote traceback ---\n"
+                           f"{traceback.format_exc()}")
+
+
+def _send_frame(sock: socket.socket, obj: Any):
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise CourierClosed("connection closed mid-frame"
+                                if buf else "connection closed")
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket) -> Any:
+    (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    return pickle.loads(_recv_exact(sock, length))
+
+
+class Server:
+    """Serve method calls on ``target`` over a localhost socket.
+
+    One lightweight thread per client connection (clients hold persistent
+    connections); ``interface`` restricts which methods may be invoked.
+    """
+
+    def __init__(self, target: Any, interface: Optional[Sequence[str]] = None,
+                 name: str = "courier", host: str = _HOST, port: int = 0,
+                 authkey: Optional[bytes] = None):
+        self.target = target
+        self.name = name
+        self.interface = tuple(interface) if interface is not None else None
+        self.authkey = authkey if authkey is not None \
+            else secrets.token_bytes(32)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen()
+        self.address: Tuple[str, int] = self._sock.getsockname()
+        self._stopped = threading.Event()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns = set()
+        self._conns_lock = threading.Lock()
+
+    def start(self) -> "Server":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"courier/{self.name}",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self):
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:   # listening socket closed by stop()
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name=f"courier/{self.name}/conn",
+                             daemon=True).start()
+
+    def _authenticate(self, conn: socket.socket) -> bool:
+        """Challenge-response before any frame is unpickled: send a nonce,
+        require HMAC(authkey, nonce) back."""
+        try:
+            nonce = secrets.token_bytes(_NONCE_BYTES)
+            conn.sendall(nonce)
+            digest = _recv_exact(conn, _DIGEST_BYTES)
+            expected = hmac.new(self.authkey, nonce, _DIGEST).digest()
+            if not hmac.compare_digest(digest, expected):
+                return False
+            conn.sendall(_AUTH_OK)
+            return True
+        except (CourierClosed, OSError):
+            return False
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            if not self._authenticate(conn):
+                return
+            while not self._stopped.is_set():
+                try:
+                    method, args, kwargs = _recv_frame(conn)
+                except (CourierClosed, OSError, EOFError):
+                    return
+                response = self._dispatch(method, args, kwargs)
+                try:
+                    _send_frame(conn, response)
+                except OSError:
+                    return
+                except Exception as e:
+                    # the RESULT failed to pickle (dumps happens before any
+                    # bytes hit the wire): answer with an error frame
+                    # instead of silently killing the connection.
+                    _send_frame(conn, ("error", RemoteError(
+                        f"response of {self.name!r}.{method} could not be "
+                        f"pickled: {type(e).__name__}: {e}")))
+        except OSError:
+            return
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, method: str, args: tuple, kwargs: dict):
+        try:
+            if self.interface is not None and method not in self.interface:
+                raise AttributeError(
+                    f"{method!r} is not in service {self.name!r}'s declared "
+                    f"interface {self.interface}")
+            result = getattr(self.target, method)(*args, **kwargs)
+            return ("ok", result)
+        except BaseException as e:   # noqa: BLE001 — forwarded to the caller
+            return ("error", picklable_error(e))
+
+    def stop(self):
+        self._stopped.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    close = stop
+
+
+class RemoteHandle:
+    """Pickle-able RPC stub: ``handle.method(...)`` forwards over courier.
+
+    Drop-in for the in-memory ``Handle`` — node code cannot tell which one
+    it holds (the Launchpad transparency property, now across processes).
+    The socket is opened lazily and never pickled; unpickling in another
+    process yields a fresh stub bound to the same server address.
+    """
+
+    def __init__(self, address: Tuple[str, int], name: str = "",
+                 interface: Optional[Sequence[str]] = None,
+                 authkey: Optional[bytes] = None):
+        self._address = tuple(address)
+        self._name = name
+        self._interface = tuple(interface) if interface is not None else None
+        self._authkey = authkey
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._address
+
+    @property
+    def node_name(self) -> str:
+        return self._name
+
+    def _connect(self) -> socket.socket:
+        sock = socket.create_connection(self._address, timeout=30)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(None)
+        try:
+            nonce = _recv_exact(sock, _NONCE_BYTES)
+            key = self._authkey if self._authkey is not None else b""
+            sock.sendall(hmac.new(key, nonce, _DIGEST).digest())
+            if _recv_exact(sock, len(_AUTH_OK)) != _AUTH_OK:
+                raise CourierClosed("bad auth ack")
+        except (CourierClosed, OSError) as e:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise ConnectionRefusedError(
+                f"courier authentication with {self._name!r} @ "
+                f"{self._address} failed (missing/wrong authkey)") from e
+        return sock
+
+    def _drop_socket(self):
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def call(self, method: str, *args, **kwargs):
+        with self._lock:
+            # A stale cached socket may fail on SEND: reconnect once and
+            # retransmit — the request never reached the server.  After a
+            # send went through there is NO retry: the server may already
+            # have executed the call (insert/increment/append are not
+            # idempotent), so a lost response must surface as an error
+            # rather than silently run the method twice.
+            for attempt in (0, 1):
+                fresh = self._sock is None
+                if fresh:
+                    self._sock = self._connect()
+                try:
+                    _send_frame(self._sock, (method, args, kwargs))
+                except (ConnectionError, OSError):
+                    self._drop_socket()
+                    if fresh or attempt:
+                        raise
+                    continue
+                try:
+                    status, payload = _recv_frame(self._sock)
+                except (CourierClosed, ConnectionError, OSError):
+                    self._drop_socket()
+                    raise
+                break
+        if status == "error":
+            raise payload
+        return payload
+
+    def __getattr__(self, item):
+        # underscore-prefixed names (which include all dunder probes) are
+        # never forwarded as remote methods
+        if item.startswith("_"):
+            raise AttributeError(item)
+        if self._interface is not None and item not in self._interface:
+            raise AttributeError(
+                f"{item!r} is not in node {self._name!r}'s declared "
+                f"interface {self._interface}")
+        return _RemoteMethod(self, item)
+
+    def dereference(self):
+        """Parity with Handle: a remote handle dereferences to itself (there
+        is no local instance on this side of the boundary)."""
+        return self
+
+    def close(self):
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+
+    def __reduce__(self):
+        return (RemoteHandle,
+                (self._address, self._name, self._interface, self._authkey))
+
+    def __repr__(self):
+        return (f"RemoteHandle({self._name!r} @ "
+                f"{self._address[0]}:{self._address[1]})")
+
+
+class _RemoteMethod:
+    """Bound remote method (picklable, reusable)."""
+
+    def __init__(self, handle: RemoteHandle, method: str):
+        self._handle = handle
+        self._method = method
+
+    def __call__(self, *args, **kwargs):
+        return self._handle.call(self._method, *args, **kwargs)
+
+    def __reduce__(self):
+        return (_RemoteMethod, (self._handle, self._method))
+
+
+def serve(target: Any, interface: Optional[Sequence[str]] = None,
+          name: str = "courier") -> Tuple[Server, RemoteHandle]:
+    """Wrap ``target`` in a started courier server and return
+    ``(server, handle)`` — the one-liner for exporting any object over RPC."""
+    server = Server(target, interface=interface, name=name).start()
+    return server, RemoteHandle(server.address, name=name,
+                                interface=interface,
+                                authkey=server.authkey)

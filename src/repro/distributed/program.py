@@ -1,59 +1,126 @@
 """Launchpad-lite (§2.4): a distributed program is a graph of nodes.
 
 Nodes are constructed lazily from factories; edges are *handles* — from the
-module's perspective a handle is indistinguishable from the object itself
-(Launchpad's key property: local vs remote calls look identical).  The local
-launcher runs each worker node in its own thread; a real fleet would place
-each node in its own process/host with RPC edges, with no change to node code.
+node's perspective a handle is indistinguishable from the object itself
+(Launchpad's key property: local vs remote calls look identical).  Execution
+is pluggable (``repro.distributed.launchers``): the same graph runs on
+threads (``local``) or on OS processes with courier RPC edges
+(``multiprocess``), with no change to node code.
+
+Node metadata (``Program.add_node``):
+
+- ``role``: ``"worker"`` (a run loop the launcher schedules — actors,
+  evaluators) or ``"service"`` (stateful, parent-resident, addressable by
+  other nodes — replay shards, counters, variable sources).  A service whose
+  instance defines ``run()`` additionally gets a parent-side thread (the
+  learner is such a hybrid: it steps SGD *and* serves ``get_variables``).
+- ``num_replicas``: expands the node into ``name/0 .. name/N-1`` replicas
+  (actor pools, evaluator fleets); per-replica arguments are declared with
+  the ``Replica`` wrapper and resolved at expansion time.
+- ``interface``: the declared RPC surface — an allowlist of method names
+  enforced both by the in-memory ``Handle`` and by the courier
+  ``RemoteHandle``/``Server``, so moving a node across a process boundary
+  never widens what its clients may call.
+
+Handle pickling degrades gracefully: once a launcher has bound a courier
+server to a node (``Program.bind_courier``), pickling any ``Handle`` to that
+node yields a ``RemoteHandle`` RPC stub with identical call syntax; pickling
+an unbound handle is a loud error rather than a silently broken proxy.
 """
 from __future__ import annotations
 
+import pickle
 import threading
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+ROLES = ("worker", "service")
+
+
+class Replica:
+    """Per-replica argument: ``Replica(fn)`` is replaced by ``fn(i)`` for
+    replica ``i`` when a replicated node is expanded (e.g. per-replica RNG
+    seeds).  Resolution happens in the parent at ``add_node`` time, so the
+    wrapped callable never needs to cross a process boundary."""
+
+    def __init__(self, fn: Callable[[int], Any]):
+        self.fn = fn
+
+    def resolve(self, index: int) -> Any:
+        return self.fn(index)
 
 
 class Handle:
-    """Lazy proxy to a node's constructed object (client side of an edge)."""
+    """Lazy in-memory proxy to a node's constructed object (client side of an
+    edge).  Pickling converts it to a courier ``RemoteHandle`` when the node
+    has a bound courier server (see module docstring)."""
 
     def __init__(self, program: "Program", name: str):
         self._program = program
         self._name = name
+
+    @property
+    def node_name(self) -> str:
+        return self._name
 
     def dereference(self):
         return self._program.resolve(self._name)
 
     def __getattr__(self, item):
         # method-call forwarding: handle.method(...) == object.method(...)
-        # Dunder probes (copy.deepcopy, pickle, inspect) must NOT construct
-        # the node as a side effect — report them absent instead.
+        # Dunder probes (copy.deepcopy, inspect) must NOT construct the node
+        # as a side effect — report them absent instead.
         if item.startswith("__") and item.endswith("__"):
             raise AttributeError(item)
+        node = self._program.node(self._name)
+        if node.interface is not None and item not in node.interface:
+            raise AttributeError(
+                f"{item!r} is not in node {self._name!r}'s declared "
+                f"interface {node.interface}")
         obj = self.dereference()
         return getattr(obj, item)
 
-
-class WorkerErrors(RuntimeError):
-    """Aggregate of every worker failure in a launched program (3.10-era
-    stand-in for ExceptionGroup) — no error is silently dropped."""
-
-    def __init__(self, errors: List[BaseException]):
-        self.errors = list(errors)
-        summary = "; ".join(f"[{i}] {type(e).__name__}: {e}"
-                            for i, e in enumerate(self.errors))
-        super().__init__(
-            f"{len(self.errors)} worker(s) failed: {summary}")
+    def __reduce__(self):
+        # Crossing a process boundary: degrade to an RPC stub bound to the
+        # node's courier server, keeping call syntax identical.
+        node = self._program.node(self._name)
+        if node.courier_address is None:
+            raise pickle.PicklingError(
+                f"Handle to node {self._name!r} cannot cross a process "
+                f"boundary: no courier server is bound to it (launchers "
+                f"bind service nodes automatically; see Launcher.serve).")
+        from repro.distributed.courier import RemoteHandle
+        return (RemoteHandle,
+                (node.courier_address, self._name, node.interface,
+                 node.courier_authkey))
 
 
 class Node:
     def __init__(self, name: str, factory: Callable[..., Any],
-                 args: tuple, kwargs: dict, is_worker: bool):
+                 args: tuple, kwargs: dict, role: str,
+                 interface: Optional[Tuple[str, ...]] = None,
+                 replica_index: Optional[int] = None,
+                 group: Optional[str] = None):
         self.name = name
         self.factory = factory
         self.args = args
         self.kwargs = kwargs
-        self.is_worker = is_worker
+        self.role = role
+        self.interface = interface
+        self.replica_index = replica_index
+        self.group = group or name
         self.instance: Any = None
+        # Where a launcher placed this node: "inline" (not launched yet or
+        # constructed-only), "thread" (parent thread), "process" (child OS
+        # process — parent-side resolve is forbidden).
+        self.placement = "inline"
+        # (host, port) + authkey of the courier server wrapping this node,
+        # if any.
+        self.courier_address: Optional[Tuple[str, int]] = None
+        self.courier_authkey: Optional[bytes] = None
+
+    @property
+    def is_worker(self) -> bool:
+        return self.role == "worker"
 
 
 class Program:
@@ -66,16 +133,61 @@ class Program:
         self._lock = threading.RLock()
 
     def add_node(self, name: str, factory: Callable[..., Any], *args,
-                 is_worker: bool = False, **kwargs) -> Handle:
-        if name in self._nodes:
-            raise ValueError(f"duplicate node {name!r}")
-        self._nodes[name] = Node(name, factory, args, kwargs, is_worker)
-        self._order.append(name)
-        return Handle(self, name)
+                 role: Optional[str] = None,
+                 num_replicas: int = 1,
+                 interface: Optional[Sequence[str]] = None,
+                 is_worker: Optional[bool] = None,
+                 **kwargs) -> Union[Handle, List[Handle]]:
+        """Register a node (or ``num_replicas`` replicas of one).
+
+        Returns a ``Handle`` — or a list of handles, one per replica, when
+        ``num_replicas > 1`` (replicas are named ``name/0 .. name/N-1``).
+        ``is_worker`` is the deprecated boolean spelling of
+        ``role="worker"``.
+        """
+        if role is None:
+            role = "worker" if is_worker else "service"
+        elif is_worker is not None:
+            raise ValueError("pass either role= or is_worker=, not both")
+        if role not in ROLES:
+            raise ValueError(f"role must be one of {ROLES}, got {role!r}")
+        if num_replicas < 1:
+            raise ValueError(f"num_replicas must be >= 1, got {num_replicas}")
+        iface = tuple(interface) if interface is not None else None
+
+        handles = []
+        for i in range(num_replicas):
+            args_i = tuple(a.resolve(i) if isinstance(a, Replica) else a
+                           for a in args)
+            kwargs_i = {k: (v.resolve(i) if isinstance(v, Replica) else v)
+                        for k, v in kwargs.items()}
+            if num_replicas == 1:
+                self._register(Node(name, factory, args_i, kwargs_i, role,
+                                    iface))
+                return Handle(self, name)
+            replica_name = f"{name}/{i}"
+            self._register(Node(replica_name, factory, args_i, kwargs_i,
+                                role, iface, replica_index=i, group=name))
+            handles.append(Handle(self, replica_name))
+        return handles
+
+    def _register(self, node: Node):
+        if node.name in self._nodes:
+            raise ValueError(f"duplicate node {node.name!r}")
+        self._nodes[node.name] = node
+        self._order.append(node.name)
+
+    def node(self, name: str) -> Node:
+        return self._nodes[name]
 
     def resolve(self, name: str):
         with self._lock:
             node = self._nodes[name]
+            if node.placement == "process":
+                raise RuntimeError(
+                    f"node {name!r} runs in a separate OS process; a "
+                    f"parent-side resolve would construct a second instance. "
+                    f"Talk to it through its handle / courier server.")
             if node.instance is None:
                 args = [a.dereference() if isinstance(a, Handle) else a
                         for a in node.args]
@@ -84,86 +196,25 @@ class Program:
                 node.instance = node.factory(*args, **kwargs)
             return node.instance
 
+    def bind_courier(self, name: str, address: Tuple[str, int],
+                     authkey: Optional[bytes] = None):
+        """Record the courier server (address + authkey) wrapping node
+        ``name`` — from then on, pickling a Handle to it yields a
+        ``RemoteHandle``."""
+        self._nodes[name].courier_address = tuple(address)
+        self._nodes[name].courier_authkey = authkey
+
     @property
     def nodes(self) -> List[Node]:
         return [self._nodes[n] for n in self._order]
 
 
-class LocalLauncher:
-    """Run worker nodes on threads (the single-machine Launchpad backend).
-
-    Fail-fast: the first worker exception stops every sibling node instead of
-    letting them spin until an external timeout.  Errors raised *after* the
-    user requested shutdown — and rate-limiter wakeups caused by stopping the
-    replay tables — are shutdown noise, not failures, and are suppressed.
-    """
-
-    def __init__(self, program: Program):
-        self.program = program
-        self.threads: List[threading.Thread] = []
-        self._stop = threading.Event()
-        self._user_stopped = False
-        self._errors: List[BaseException] = []
-        self._errors_lock = threading.Lock()
-
-    def launch(self):
-        # construct everything first (resolves the graph edges)
-        for node in self.program.nodes:
-            self.program.resolve(node.name)
-        for node in self.program.nodes:
-            if not node.is_worker:
-                continue
-            t = threading.Thread(target=self._run_node, args=(node,),
-                                 name=node.name, daemon=True)
-            self.threads.append(t)
-            t.start()
-        return self
-
-    def _run_node(self, node: Node):
-        try:
-            node.instance.run()
-        except StopIteration:
-            pass
-        except Exception as e:
-            from repro.replay.rate_limiter import RateLimiterTimeout
-            # Once a stop is in flight (user- or fail-fast-initiated — the
-            # flag is always set before any table is stopped), rate-limiter
-            # wakeups are shutdown noise, as is anything raised after the
-            # user asked us to shut down.  A "stopped" error with no stop in
-            # flight is a real worker death and must be surfaced.
-            if self._stop.is_set() and (self._user_stopped
-                                        or isinstance(e, RateLimiterTimeout)):
-                return
-            with self._errors_lock:
-                self._errors.append(e)
-            # fail fast: stop the siblings so join() returns promptly
-            self._initiate_stop()
-
-    def should_stop(self) -> bool:
-        return self._stop.is_set()
-
-    def _initiate_stop(self):
-        self._stop.set()
-        for node in self.program.nodes:
-            inst = node.instance
-            if inst is not None and hasattr(inst, "stop"):
-                try:
-                    inst.stop()
-                except Exception:
-                    pass
-
-    def stop(self):
-        self._user_stopped = True
-        self._initiate_stop()
-
-    def join(self, timeout: Optional[float] = None):
-        deadline = None if timeout is None else time.time() + timeout
-        for t in self.threads:
-            remaining = None if deadline is None else max(deadline - time.time(), 0)
-            t.join(remaining)
-        with self._errors_lock:
-            errors = list(self._errors)
-        if len(errors) == 1:
-            raise errors[0]
-        if errors:
-            raise WorkerErrors(errors)
+def __getattr__(name):   # PEP 562 — keep old import sites working
+    # LocalLauncher / WorkerErrors historically lived in this module; they
+    # moved to repro.distributed.launchers with the pluggable-backend split.
+    if name in ("LocalLauncher", "MultiprocessLauncher", "Launcher",
+                "WorkerErrors", "JoinTimeout", "get_launcher",
+                "register_launcher"):
+        from repro.distributed import launchers
+        return getattr(launchers, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -41,6 +41,11 @@ class ExperimentConfig:
     prefetch_size: learner prefetch queue depth in batches (None = defer to
         the builder's options; >0 = a ``PrefetchingDataset`` on the
         distributed learner hot path).
+    launcher: execution backend for distributed runs, resolved through the
+        ``repro.distributed`` launcher registry — ``"local"`` (worker nodes
+        on threads) or ``"multiprocess"`` (each worker node in its own OS
+        process with courier RPC edges; requires ``builder_factory`` and
+        ``environment_factory`` to be picklable, i.e. module-level).
     """
 
     builder_factory: BuilderFactory
@@ -55,6 +60,7 @@ class ExperimentConfig:
     eval_episodes: int = 10
     num_replay_shards: Optional[int] = None
     prefetch_size: Optional[int] = None
+    launcher: str = "local"
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -71,6 +77,9 @@ class ExperimentConfig:
         if self.prefetch_size is not None and self.prefetch_size < 0:
             raise ValueError(f"prefetch_size must be >= 0, "
                              f"got {self.prefetch_size}")
+        if not self.launcher or not isinstance(self.launcher, str):
+            raise ValueError(f"launcher must be a backend name, "
+                             f"got {self.launcher!r}")
 
 
 @dataclasses.dataclass

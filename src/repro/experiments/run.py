@@ -108,7 +108,9 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                with_evaluator: bool = False,
                                poll_s: float = 0.2) -> ExperimentResult:
     """Distributed run: the SAME builder, unchanged, on the Launchpad-lite
-    graph (Fig 4) — N actor nodes + learner + rate-limited replay."""
+    graph (Fig 4) — N actor nodes + learner + rate-limited replay.  The
+    execution backend comes from ``config.launcher`` (``"local"`` threads or
+    ``"multiprocess"`` OS processes with courier RPC edges)."""
     if num_actors < 1:
         raise ValueError(f"num_actors must be >= 1, got {num_actors}")
     spec = make_environment_spec(config.environment_factory(config.seed))
@@ -119,7 +121,10 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   num_actors=num_actors, seed=config.seed,
                                   with_evaluator=with_evaluator,
                                   num_replay_shards=config.num_replay_shards,
-                                  prefetch_size=config.prefetch_size)
+                                  prefetch_size=config.prefetch_size,
+                                  launcher=config.launcher,
+                                  builder_factory=config.builder_factory,
+                                  spec=spec)
     checkpointer = _make_checkpointer(config)
     t0 = time.time()
     try:
@@ -132,6 +137,7 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
         rl = dist.table.rate_limiter
         extras = {
             "num_actors": num_actors,
+            "launcher": config.launcher,
             "inserts": rl.inserts,
             "samples": rl.samples,
             "min_size_to_sample": rl.min_size_to_sample,
@@ -142,7 +148,7 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
         if hasattr(dist.table, "stats"):   # ShardedReplay: per-shard view
             extras["replay"] = dist.table.stats()
         if with_evaluator:
-            extras["evaluator_returns"] = list(dist.evaluator.returns)
+            extras["evaluator_returns"] = dist.evaluator_returns()
     finally:
         dist.stop()
 

@@ -34,6 +34,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.replay.table import Item, Table
 
+# The declared RPC surface of a replay service node (shard or front-end):
+# what a courier server wrapping it lets remote adders/learners call.  The
+# distributed assembly layer attaches this to every replay node it emits, so
+# each shard is independently courier-addressable (the seam a multi-host
+# backend will use to place shards on remote replay servers).
+REPLAY_INTERFACE = ("insert", "sample", "update_priorities", "size", "stats")
+
 # Knuth's multiplicative hash constant: decorrelates consecutive tickets.
 _HASH_MULT = 2654435761
 
