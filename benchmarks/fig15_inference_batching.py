@@ -1,0 +1,187 @@
+"""Fig 15: batched acting — actor steps/sec vs ``num_envs`` x inference mode.
+
+Two claims behind the batched acting pipeline:
+
+1. **Vectorized env loops** (tier 1): N Catch envs stepped by ONE vmapped,
+   jitted policy dispatch per tick beat N sequential single-env loops (one
+   dispatch per step each) — the per-step Python/JAX dispatch overhead is
+   amortized across the batch.  Acceptance: >= 3x actor steps/sec at 16
+   vectorized envs vs 16 sequential single-env loops on the same policy.
+
+2. **The InferenceServer** (tier 2, SEED-style): with multiprocess actors
+   doing REMOTE inference, coalescing ``select_action`` RPCs into batched
+   forward passes beats per-actor remote dispatch (the same server with the
+   coalescing window disabled: one forward pass per request) — acceptance
+   at >= 4 actor workers.  The figure also reports ``inference="local"``
+   (each actor owns a policy copy) for context: on few-core CPU hosts with
+   a small MLP the local copy wins outright — centralizing inference pays
+   off once the policy is expensive enough (or lives on an accelerator the
+   actors don't have), which is SEED's premise.
+
+    python benchmarks/fig15_inference_batching.py            # full sweep
+    python benchmarks/fig15_inference_batching.py --smoke    # CI mechanics
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import csv_row
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import (Counter, EnvironmentLoop, VariableClient,
+                        VectorizedEnvironmentLoop, make_environment_spec)
+from repro.envs import Catch, VectorEnv
+from repro.experiments import ExperimentConfig, run_distributed_experiment
+
+ENV_COUNTS = (1, 4, 16)
+STEPS_PER_ENV = 2000
+SMOKE_STEPS_PER_ENV = 50
+
+SERVER_ACTORS = 4
+SERVER_TARGET_STEPS = 4000
+SMOKE_SERVER_TARGET_STEPS = 200
+# Policy torso wide enough that a forward pass dominates the courier hop —
+# the regime the inference server exists for (SEED's premise).
+SERVER_HIDDEN = 256
+TIMEOUT_S = 240.0
+
+
+# Module-level factories: the multiprocess backend pickles them into
+# spawned actor processes.
+def builder_factory(spec):
+    # samples_per_insert=0 -> MinSize limiter: actors run unthrottled, so
+    # the figure measures interaction throughput, not the SPI schedule.
+    return DQNBuilder(spec, DQNConfig(hidden=SERVER_HIDDEN,
+                                      min_replay_size=100,
+                                      samples_per_insert=0.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def env_factory(seed):
+    return Catch(seed=seed)
+
+
+# ------------------------------------------------- tier 1: vectorized loops
+def _acting_builder():
+    spec = make_environment_spec(Catch(seed=0))
+    return DQNBuilder(spec, DQNConfig(min_replay_size=100,
+                                      samples_per_insert=0.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def run_sequential(num_envs: int, steps_per_env: int) -> float:
+    """N single-env loops sharing one actor (one policy dispatch PER STEP),
+    run one after another — the pre-vectorization acting path."""
+    builder = _acting_builder()
+    learner = builder.make_learner(iter([]))
+    actor = builder.make_actor(builder.make_policy(evaluation=False),
+                               VariableClient(learner), adder=None, seed=0)
+    loops = [EnvironmentLoop(Catch(seed=i), actor, counter=Counter(),
+                             should_update=False) for i in range(num_envs)]
+    loops[0].run(num_steps=9)   # compile outside the timed window
+    t0 = time.perf_counter()
+    for loop in loops:
+        loop.run(num_steps=steps_per_env)
+    wall = time.perf_counter() - t0
+    return num_envs * steps_per_env / wall
+
+
+def run_vectorized(num_envs: int, steps_per_env: int) -> float:
+    """One VectorEnv + batched actor: one policy dispatch per N steps."""
+    builder = _acting_builder()
+    learner = builder.make_learner(iter([]))
+    actor = builder.make_batched_actor(
+        builder.make_policy(evaluation=False),
+        VariableClient(learner), [None] * num_envs, seed=0)
+    loop = VectorizedEnvironmentLoop(
+        VectorEnv(env_factory, num_envs, seed=0), actor, counter=Counter(),
+        should_update=False)
+    loop.run(num_steps=9 * num_envs)   # compile outside the timed window
+    t0 = time.perf_counter()
+    loop.run(num_steps=num_envs * steps_per_env)
+    wall = time.perf_counter() - t0
+    return num_envs * steps_per_env / wall
+
+
+# --------------------------------------------- tier 2: inference placement
+def run_inference_mode(mode: str, num_actors: int, target_steps: int):
+    """mode: 'local' (per-actor policy copy), 'server' (coalescing window),
+    'server-nobatch' (same server, window disabled: ONE request per forward
+    pass — every remote actor pays a full model dispatch each)."""
+    config = ExperimentConfig(
+        builder_factory=builder_factory, environment_factory=env_factory,
+        seed=0, eval_episodes=0, launcher="multiprocess",
+        inference="server" if mode.startswith("server") else "local",
+        inference_max_batch_size=1 if mode == "server-nobatch" else None)
+    result = run_distributed_experiment(
+        config, num_actors=num_actors, max_actor_steps=target_steps,
+        timeout_s=TIMEOUT_S)
+    steps = int(result.counts.get("actor_steps", 0))
+    wall = result.extras["walltime"]
+    return {"steps": steps, "wall": wall,
+            "steps_per_sec": steps / max(wall, 1e-9),
+            "inference": result.extras.get("inference")}
+
+
+def main(smoke: bool = False):
+    steps_per_env = SMOKE_STEPS_PER_ENV if smoke else STEPS_PER_ENV
+    env_counts = (4,) if smoke else ENV_COUNTS
+    results = {}
+
+    for n in env_counts:
+        seq = run_sequential(n, steps_per_env)
+        vec = run_vectorized(n, steps_per_env)
+        results[n] = (seq, vec)
+        csv_row(f"fig15/seq/envs{n}/steps_per_sec", round(seq, 1))
+        csv_row(f"fig15/vec/envs{n}/steps_per_sec", round(vec, 1))
+        csv_row(f"fig15/vec_vs_seq/envs{n}", round(vec / max(seq, 1e-9), 2),
+                "vmapped dispatch amortized over the batch")
+        if smoke:
+            assert seq > 0 and vec > 0, "acting produced no steps"
+    if not smoke:
+        top = env_counts[-1]
+        ratio = results[top][1] / max(results[top][0], 1e-9)
+        csv_row(f"fig15/acceptance/vec{top}x_speedup", round(ratio, 2),
+                "acceptance: >= 3x at 16 envs")
+        assert ratio >= 3.0, (
+            f"vectorized acting at {top} envs only {ratio:.2f}x sequential")
+
+    num_actors = 2 if smoke else SERVER_ACTORS
+    target = SMOKE_SERVER_TARGET_STEPS if smoke else SERVER_TARGET_STEPS
+    mode_names = (("local", "server") if smoke
+                  else ("local", "server-nobatch", "server"))
+    modes = {}
+    for mode in mode_names:
+        r = run_inference_mode(mode, num_actors, target)
+        modes[mode] = r
+        csv_row(f"fig15/{mode}/actors{num_actors}/steps_per_sec",
+                round(r["steps_per_sec"], 1))
+        if smoke:
+            assert r["steps"] > 0, f"{mode} inference produced no steps"
+    if modes["server"]["inference"] is not None:
+        stats = modes["server"]["inference"]
+        csv_row("fig15/server/avg_rows_per_batch",
+                round(stats["avg_rows_per_batch"], 2),
+                "coalescing across actor workers")
+        assert stats["batches"] > 0, "inference server never ran a batch"
+    if not smoke:
+        ratio = (modes["server"]["steps_per_sec"]
+                 / max(modes["server-nobatch"]["steps_per_sec"], 1e-9))
+        csv_row("fig15/acceptance/server_vs_per_actor_dispatch",
+                round(ratio, 2),
+                f"coalesced vs one-dispatch-per-request at "
+                f"{num_actors} actors")
+        assert ratio > 1.0, (
+            f"coalescing ({modes['server']['steps_per_sec']:.1f} steps/s) "
+            f"did not beat per-actor dispatch "
+            f"({modes['server-nobatch']['steps_per_sec']:.1f} steps/s)")
+        csv_row("fig15/server_vs_local",
+                round(modes["server"]["steps_per_sec"]
+                      / max(modes["local"]["steps_per_sec"], 1e-9), 2),
+                "vs per-actor LOCAL copies — centralizing pays once the "
+                f"policy outgrows the RPC hop (hidden={SERVER_HIDDEN})")
+    return results, modes
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

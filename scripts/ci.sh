@@ -27,6 +27,10 @@ echo "[ci] smoke: actor scaling, local + multiprocess backends (fig14 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig14_actor_scaling.py --smoke
 
+echo "[ci] smoke: vectorized acting + inference batching (fig15 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig15_inference_batching.py --smoke
+
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__
 python scripts/smoke_multiprocess.py

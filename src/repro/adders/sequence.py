@@ -36,6 +36,8 @@ def _seq_item(steps: List[Dict[str, Any]], pad_to: Optional[int] = None):
 
 
 class SequenceAdder(Adder):
+    supports_extras = True   # add_first(timestep, extras): recurrent state
+
     def __init__(self, table: Table, sequence_length: int, period: int,
                  priority: float = 1.0, pad_end: bool = True):
         if period <= 0 or sequence_length <= 0:

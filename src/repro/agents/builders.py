@@ -18,9 +18,14 @@ import threading
 from typing import List, Optional
 
 from repro.builders import AgentBuilder
-from repro.core import Agent, Counter, EnvironmentLoop, VariableClient
+from repro.core import (Agent, Counter, EnvironmentLoop,
+                        INFERENCE_INTERFACE, InferenceClientActor,
+                        InferenceServer, VariableClient,
+                        VectorizedEnvironmentLoop)
+from repro.core.inference import policy_is_feed_forward
 from repro.distributed.launchers import JoinTimeout, get_launcher
 from repro.distributed.program import Program, Replica
+from repro.envs.vector import VectorEnv
 from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
 from repro.replay.service import REPLAY_INTERFACE
 
@@ -39,24 +44,32 @@ def _effective_shards(options, num_replay_shards):
 
 
 def make_agent(builder: AgentBuilder, seed: int = 0,
-               num_replay_shards: Optional[int] = None) -> Agent:
+               num_replay_shards: Optional[int] = None,
+               num_envs: Optional[int] = None) -> Agent:
     """Synchronous single-process agent: actor and learner in lockstep.
 
     Sharded replay is honoured here too; prefetching is not — the lockstep
     schedule relies on sampling (and its rate-limiter accounting) happening
-    synchronously inside the learner step.
+    synchronously inside the learner step.  With ``num_envs > 1`` the actor
+    is the builder's BATCHED actor fanning out to one adder per env — drive
+    it with a ``VectorEnv`` + ``VectorizedEnvironmentLoop``.
     """
     options = builder.options
     num_shards = _effective_shards(options, num_replay_shards)
+    num_envs = _resolve(num_envs, options.num_envs_per_actor)
     table = make_replay_shards(builder.make_replay, num_shards)
-    adder = builder.make_adder(table)
     iterator = builder.make_dataset(table)
     learner = builder.make_learner(
         iterator, priority_update_cb=table.update_priorities)
     client = VariableClient(learner,
                             update_period=options.variable_update_period)
-    actor = builder.make_actor(builder.make_policy(evaluation=False),
-                               client, adder, seed)
+    policy = builder.make_policy(evaluation=False)
+    if num_envs > 1:
+        adders = [builder.make_adder(table) for _ in range(num_envs)]
+        actor = builder.make_batched_actor(policy, client, adders, seed)
+    else:
+        actor = builder.make_actor(policy, client,
+                                   builder.make_adder(table), seed)
     consuming = table.selector.consumes
 
     def can_step():
@@ -120,22 +133,57 @@ class _LearnerWorker:
 
 
 class _ActorWorker:
-    """Actor node: its own environment instance + loop (Fig 4).  Every
+    """Actor node: its own environment instance(s) + loop (Fig 4).  Every
     collaborator arrives as a handle (in-memory or courier RemoteHandle) —
-    this class cannot tell which backend it runs under."""
+    this class cannot tell which backend it runs under.
+
+    ``num_envs > 1`` turns the node into a vectorized acting worker: a
+    ``VectorEnv`` of N auto-resetting envs driven by the builder's batched
+    actor (one policy dispatch per N transitions), each env writing through
+    its own adder.  ``inference`` (a handle to an ``InferenceServer``)
+    switches policy evaluation to SEED-style RPC — the worker then holds no
+    weights and never polls the learner.
+    """
 
     def __init__(self, env_factory, builder, variable_source, counter,
-                 table, seed: int, max_episodes: Optional[int] = None):
+                 table, seed: int, max_episodes: Optional[int] = None,
+                 num_envs: int = 1, inference=None):
         builder = _builder_of(builder)
-        self.env = env_factory(seed)
-        client = VariableClient(
-            variable_source,
-            update_period=builder.options.variable_update_period)
-        adder = builder.make_adder(table)
-        actor = builder.make_actor(builder.make_policy(evaluation=False),
-                                   client, adder, seed)
-        self.loop = EnvironmentLoop(self.env, actor, counter=counter,
-                                    label="actor")
+        options = builder.options
+        num_envs = max(int(num_envs), 1)
+        if inference is not None:
+            if num_envs > 1:
+                adders = [builder.make_adder(table) for _ in range(num_envs)]
+                actor = InferenceClientActor(inference, adders=adders,
+                                             batched=True)
+            else:
+                actor = InferenceClientActor(
+                    inference, adder=builder.make_adder(table))
+        else:
+            client = VariableClient(variable_source, update_period=1)
+            policy = builder.make_policy(evaluation=False)
+            if num_envs > 1:
+                adders = [builder.make_adder(table) for _ in range(num_envs)]
+                actor = builder.make_batched_actor(policy, client, adders,
+                                                   seed)
+            else:
+                actor = builder.make_actor(
+                    policy, client, builder.make_adder(table), seed)
+        # weight-sync cadence lives in the LOOP (update_period in env steps /
+        # ticks); the client fetches on every poke it does receive.  A tick
+        # of the vectorized loop covers num_envs transitions, so the tick
+        # period shrinks accordingly.
+        update_period = max(options.variable_update_period // num_envs, 1)
+        if num_envs > 1:
+            self.env = VectorEnv(env_factory, num_envs, seed=seed)
+            self.loop = VectorizedEnvironmentLoop(
+                self.env, actor, counter=counter, label="actor",
+                update_period=update_period)
+        else:
+            self.env = env_factory(seed)
+            self.loop = EnvironmentLoop(self.env, actor, counter=counter,
+                                        label="actor",
+                                        update_period=update_period)
         self.max_episodes = max_episodes
         self._stop = threading.Event()
 
@@ -198,7 +246,7 @@ class DistributedAgent:
     """Handle onto a launched distributed program."""
 
     def __init__(self, program, launcher, learner, table, counter,
-                 dataset=None, eval_log=None):
+                 dataset=None, eval_log=None, inference_server=None):
         self.program = program
         self.launcher = launcher
         self.learner = learner
@@ -206,6 +254,7 @@ class DistributedAgent:
         self.counter = counter
         self.dataset = dataset
         self.eval_log = eval_log
+        self.inference_server = inference_server
 
     def evaluator_returns(self) -> List[float]:
         """Episode returns reported by the evaluator node (works for both
@@ -239,7 +288,11 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            prefetch_size: Optional[int] = None,
                            launcher: str = "local",
                            builder_factory=None,
-                           spec=None) -> DistributedAgent:
+                           spec=None,
+                           num_envs_per_actor: Optional[int] = None,
+                           inference: Optional[str] = None,
+                           inference_max_batch_size: Optional[int] = None,
+                           inference_max_wait_ms: float = 2.0) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
 
@@ -255,13 +308,24 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     per shard is placed in the program graph (each independently courier-
     addressable).  With ``prefetch_size > 0`` the learner consumes batches
     through a ``PrefetchingDataset`` instead of the synchronous dataset.
-    Both default to the builder's ``BuilderOptions``.
+
+    ``num_envs_per_actor > 1`` makes every actor node a vectorized acting
+    worker (a ``VectorEnv`` + batched actor, one policy dispatch per N env
+    transitions); ``inference="server"`` additionally centralizes policy
+    evaluation in a SEED-style ``InferenceServer`` service node that
+    coalesces ``select_action`` RPCs from all actor workers into batched
+    forward passes.  All four default to the builder's ``BuilderOptions``.
     """
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
     options = builder.options
     num_shards = _effective_shards(options, num_replay_shards)
     prefetch = _resolve(prefetch_size, options.prefetch_size)
+    num_envs = _resolve(num_envs_per_actor, options.num_envs_per_actor)
+    inference_mode = _resolve(inference, options.inference)
+    if inference_mode not in ("local", "server"):
+        raise ValueError(f"inference must be 'local' or 'server', "
+                         f"got {inference_mode!r}")
 
     table = make_replay_shards(builder.make_replay, num_shards)
     iterator = builder.make_dataset(table)
@@ -271,6 +335,43 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     learner = builder.make_learner(
         iterator, priority_update_cb=table.update_priorities)
     worker = _LearnerWorker(learner, max_steps=max_learner_steps)
+
+    inference_server = None
+    if inference_mode == "server":
+        policy = builder.make_policy(evaluation=False)
+        # Server inference supports exactly the builders that use the
+        # DEFAULT feed-forward batched actor: an override means the agent
+        # needs per-step state or per-env extras (recurrent core state,
+        # IMPALA's behaviour logits, MCTS planning) that a weightless
+        # InferenceClientActor cannot produce — reject at config time
+        # rather than crash in the batcher thread mid-run.
+        custom_batched = (type(builder).make_batched_actor
+                          is not AgentBuilder.make_batched_actor)
+        if policy is None or custom_batched \
+                or not policy_is_feed_forward(policy):
+            raise ValueError(
+                f"{type(builder).__name__} does not support "
+                f"inference='server': the server batches plain "
+                f"(params, key, obs) -> action policies only (no recurrent "
+                f"state, no per-step extras) — keep inference='local' for "
+                f"this agent")
+        # window sized so one full sweep of the fleet fits in a single
+        # forward pass (requests are rows: num_envs per vectorized actor);
+        # max_batch_size=num_envs disables coalescing (one request per
+        # pass — the per-actor-dispatch baseline fig15 compares against).
+        max_batch = _resolve(inference_max_batch_size,
+                             max(num_actors * num_envs, 2))
+        if max_batch < num_envs:
+            raise ValueError(
+                f"inference_max_batch_size={max_batch} cannot hold one "
+                f"vectorized actor's request of num_envs_per_actor="
+                f"{num_envs} rows (requests are never split)")
+        inference_server = InferenceServer(
+            policy, worker,
+            max_batch_size=max_batch,
+            max_wait_ms=inference_max_wait_ms,
+            update_period=options.variable_update_period,
+            rng_seed=seed + 777_777)
 
     # What crosses into worker processes: a picklable builder stand-in when
     # the backend needs one, the shared builder instance otherwise.
@@ -295,11 +396,17 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     learner_handle = program.add_node("learner", lambda: worker,
                                       role="service",
                                       interface=("get_variables",))
+    inference_handle = None
+    if inference_server is not None:
+        inference_handle = program.add_node(
+            "inference", lambda: inference_server, role="service",
+            interface=INFERENCE_INTERFACE)
     program.add_node(
         "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
         counter_handle, replay_handle,
         Replica(lambda i: seed + 1000 * (i + 1)),
-        role="worker", num_replicas=num_actors)
+        role="worker", num_replicas=num_actors,
+        num_envs=num_envs, inference=inference_handle)
     eval_log_handle = None
     if with_evaluator:
         eval_log_handle = program.add_node(
@@ -314,7 +421,8 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                              program.resolve("counter"),
                              dataset=iterator if prefetch > 0 else None,
                              eval_log=(program.resolve("eval_log")
-                                       if with_evaluator else None))
+                                       if with_evaluator else None),
+                             inference_server=inference_server)
     if with_evaluator and program.node("evaluator").placement != "process":
         agent.evaluator = program.resolve("evaluator")
     return agent

@@ -58,8 +58,11 @@ class JaxLearner(Learner):
         if self._priority_cb is not None and priorities is not None:
             self._priority_cb(np.asarray(sample.info.keys),
                               np.asarray(priorities))
-        self._metrics = {k: float(v) for k, v in metrics.items()}
-        self._metrics["learner_steps"] = float(self._state.steps)
+        # ONE host transfer for all metrics + the step counter (a float(v)
+        # per entry is a separate blocking device sync each).
+        host_metrics, steps = jax.device_get((metrics, self._state.steps))
+        self._metrics = {k: float(v) for k, v in host_metrics.items()}
+        self._metrics["learner_steps"] = float(steps)
         self._metrics["learner_walltime"] = self._walltime
         return self._metrics
 

@@ -18,6 +18,8 @@ import numpy as np
 from repro import optim
 from repro.agents.common import JaxLearner, LearnerState, fresh_copy
 from repro.builders import AgentBuilder, BuilderOptions
+from repro.core.actors import (STEP_MOD, BatchedFeedForwardActor,
+                               _folded_policy)
 from repro.core.types import EnvironmentSpec
 from repro.kernels import ref as kernels_ref
 from repro.networks.mlp import flatten_obs, mlp_apply, mlp_init
@@ -132,16 +134,17 @@ class IMPALAActor:
     """Feed-forward actor that also records behaviour logits as extras."""
 
     def __init__(self, policy, variable_client, adder, rng_seed=0):
-        self._policy = jax.jit(policy)
+        self._policy = jax.jit(_folded_policy(policy))
         self._client = variable_client
         self._adder = adder
         self._key = jax.random.key(rng_seed)
+        self._steps = 0
         self._last_logits = None
 
     def select_action(self, observation):
-        self._key, sub = jax.random.split(self._key)
-        action, logits = self._policy(self._client.params, sub,
-                                      jnp.asarray(observation))
+        action, logits = self._policy(self._client.params, self._key,
+                                      self._steps, jnp.asarray(observation))
+        self._steps = (self._steps + 1) % STEP_MOD
         self._last_logits = np.asarray(logits)
         return np.asarray(action)
 
@@ -156,6 +159,26 @@ class IMPALAActor:
 
     def update(self, wait=False):
         self._client.update(wait)
+
+
+class BatchedIMPALAActor(BatchedFeedForwardActor):
+    """Vectorized IMPALA acting: one vmapped dispatch returns N (action,
+    logits) pairs; each env's behaviour logits ride into its own adder."""
+
+    def __init__(self, policy, variable_client, adders, rng_seed=0):
+        super().__init__(policy, variable_client, adders, rng_seed=rng_seed)
+        self._last_logits = None
+
+    def select_action(self, observation):
+        actions, logits = self._run_policy(observation)
+        self._last_logits = np.asarray(logits)
+        return np.asarray(actions)
+
+    def observe(self, action, next_timestep, env_id: int = 0):
+        adder = self._adder(env_id)
+        if adder:
+            adder.add(action, next_timestep,
+                      extras={"behavior_logits": self._last_logits[env_id]})
 
 
 class IMPALABuilder(AgentBuilder):
@@ -197,3 +220,8 @@ class IMPALABuilder(AgentBuilder):
 
     def make_actor(self, policy, variable_client, adder, seed: int = 0):
         return IMPALAActor(policy, variable_client, adder, rng_seed=seed)
+
+    def make_batched_actor(self, policy, variable_client, adders,
+                           seed: int = 0):
+        return BatchedIMPALAActor(policy, variable_client, adders,
+                                  rng_seed=seed)

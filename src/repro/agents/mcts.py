@@ -237,3 +237,9 @@ class MCTSBuilder(AgentBuilder):
     def make_actor(self, policy, variable_client, adder, seed: int = 0):
         return MCTSActor(self.spec, self.cfg, variable_client, adder,
                          model_env=self.model_env_factory(seed), seed=seed)
+
+    def make_batched_actor(self, policy, variable_client, adders,
+                           seed: int = 0):
+        raise NotImplementedError(
+            "MCTS actors plan with a per-environment simulator; vectorized "
+            "acting (num_envs_per_actor > 1) is not supported")

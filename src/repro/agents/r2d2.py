@@ -187,3 +187,10 @@ class R2D2Builder(AgentBuilder):
         net = make_network(self.spec, self.cfg)
         return RecurrentActor(policy, lambda: net.initial_state(1),
                               variable_client, adder, rng_seed=seed)
+
+    def make_batched_actor(self, policy, variable_client, adders,
+                           seed: int = 0):
+        from repro.core import BatchedRecurrentActor
+        net = make_network(self.spec, self.cfg)
+        return BatchedRecurrentActor(policy, lambda: net.initial_state(1),
+                                     variable_client, adders, rng_seed=seed)

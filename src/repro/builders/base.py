@@ -49,6 +49,13 @@ class BuilderOptions:
     prefetch_size: learner-side prefetch queue depth in batches (0 = the
         synchronous dataset; >0 wraps it in a ``PrefetchingDataset`` on the
         distributed learner hot path).
+    num_envs_per_actor: environments each actor drives through a
+        ``VectorEnv`` + batched actor (1 = the classic single-env loop;
+        N > 1 = one vmapped policy dispatch per N env transitions).
+    inference: where actor policy evaluation runs in distributed programs —
+        ``"local"`` (each actor evaluates its own policy copy) or
+        ``"server"`` (SEED-style: actors RPC a central ``InferenceServer``
+        that coalesces requests into batched forward passes).
     """
 
     variable_update_period: int = 10
@@ -58,6 +65,8 @@ class BuilderOptions:
     offline: bool = False
     num_replay_shards: int = 1
     prefetch_size: int = 0
+    num_envs_per_actor: int = 1
+    inference: str = "local"
 
     def __post_init__(self):
         if self.variable_update_period < 1:
@@ -80,6 +89,14 @@ class BuilderOptions:
         if self.prefetch_size < 0:
             raise ValueError(
                 f"prefetch_size must be >= 0, got {self.prefetch_size}")
+        if self.num_envs_per_actor < 1:
+            raise ValueError(
+                f"num_envs_per_actor must be >= 1, got "
+                f"{self.num_envs_per_actor}")
+        if self.inference not in ("local", "server"):
+            raise ValueError(
+                f"inference must be 'local' or 'server', got "
+                f"{self.inference!r}")
 
 
 class AgentBuilder(abc.ABC):
@@ -134,6 +151,19 @@ class AgentBuilder(abc.ABC):
     def make_actor(self, policy, variable_client, adder, seed: int = 0):
         """The actor running ``policy``, pulling weights from
         ``variable_client`` and feeding ``adder`` (which may be None)."""
+
+    def make_batched_actor(self, policy, variable_client, adders,
+                           seed: int = 0):
+        """A batched actor stepping ``len(adders)`` envs through ONE vmapped
+        policy dispatch, fanning transitions out to per-env ``adders``.
+
+        Not abstract: the default vmaps a feed-forward ``(params, key, obs)``
+        policy.  Builders with recurrent actors override it to thread
+        stacked core state; planning actors (MCTS) override it to raise.
+        """
+        from repro.core.actors import BatchedFeedForwardActor
+        return BatchedFeedForwardActor(policy, variable_client, adders,
+                                       rng_seed=seed)
 
 
 def registered_builders() -> List[Type[AgentBuilder]]:

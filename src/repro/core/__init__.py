@@ -1,9 +1,13 @@
 """Acme's core: actors, learners, agents, environment loops, variable flow."""
 from repro.builders import AgentBuilder, BuilderOptions  # noqa: F401
-from repro.core.actors import FeedForwardActor, RecurrentActor  # noqa: F401
+from repro.core.actors import (  # noqa: F401
+    BatchedFeedForwardActor, BatchedRecurrentActor, FeedForwardActor,
+    InferenceClientActor, RecurrentActor)
 from repro.core.agent import Agent  # noqa: F401
+from repro.core.inference import INFERENCE_INTERFACE, InferenceServer  # noqa: F401
 from repro.core.interfaces import Actor, Learner, VariableSource, Worker  # noqa: F401
-from repro.core.loop import Counter, EnvironmentLoop  # noqa: F401
+from repro.core.loop import (  # noqa: F401
+    Counter, EnvironmentLoop, VectorizedEnvironmentLoop)
 from repro.core.types import (  # noqa: F401
     ArraySpec, BoundedArraySpec, DiscreteArraySpec, Environment,
     EnvironmentSpec, StepType, TimeStep, Transition, make_environment_spec,

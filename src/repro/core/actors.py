@@ -1,14 +1,30 @@
-"""Generic actors (§2.3): feed-forward and recurrent.
+"""Generic actors (§2.3): feed-forward, recurrent, and their batched forms.
 
 A ``FeedForwardActor`` evaluates a jitted policy function and forwards its
 observations to an adder; a ``RecurrentActor`` additionally threads a
 recurrent core state between ``select_action`` calls and stores the state at
 sequence starts (R2D2's stale-state mechanism).  Both pull weights from a
 ``VariableClient`` on ``update()`` — they never own the learner.
+
+RNG lives on the device: every actor keeps a fixed base key and derives the
+per-step key INSIDE the jitted call via ``fold_in`` on a host-side step
+counter, so selecting an action costs exactly one dispatch (no host-side
+``jax.random.split`` per step).
+
+``BatchedFeedForwardActor``/``BatchedRecurrentActor`` drive N environments
+through ONE ``jax.vmap``-ed, jitted policy call per step — the actor half of
+the vectorized acting pipeline (``repro.envs.vector.VectorEnv`` +
+``VectorizedEnvironmentLoop``).  They fan transitions out to N per-env
+adders via the ``env_id`` argument on ``observe``/``observe_first``.
+
+``InferenceClientActor`` is the SEED-style client: ``select_action`` is an
+RPC to a central ``InferenceServer`` that coalesces requests from many actor
+workers into one batched forward pass; the client holds no weights at all.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+import inspect
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,20 +41,76 @@ if TYPE_CHECKING:  # avoid core <-> adders circular import at runtime
 
 PolicyFn = Callable[..., Any]   # (params, key, obs) -> action
 
+# Step counters fed to the jitted fold_in are traced as int32 — wrap before
+# they overflow (key reuse after 2**31 steps is statistically harmless).
+STEP_MOD = 2 ** 31
+
+
+def adder_takes_extras(adder) -> bool:
+    """Whether ``adder.add_first`` accepts a second ``extras`` argument.
+
+    Prefers the adder's declared ``supports_extras`` attribute; falls back to
+    an ``inspect.signature`` arity check for third-party adders.  This is an
+    explicit capability probe — unlike calling ``add_first`` inside a
+    ``try/except TypeError``, it can never swallow a real ``TypeError``
+    raised by the adder's own implementation.
+    """
+    if adder is None:
+        return False
+    declared = getattr(adder, "supports_extras", None)
+    if declared is not None:
+        return bool(declared)
+    try:
+        params = inspect.signature(adder.add_first).parameters
+    except (TypeError, ValueError):
+        return False
+    positional = [p for p in params.values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    has_var = any(p.kind == p.VAR_POSITIONAL for p in params.values())
+    return len(positional) >= 2 or has_var
+
+
+def _folded_policy(policy: PolicyFn):
+    """(params, base_key, step, *rest) — per-step key derived on device."""
+
+    def run(params, base_key, step, *rest):
+        return policy(params, jax.random.fold_in(base_key, step), *rest)
+
+    return run
+
+
+def _batched_policy(policy: PolicyFn):
+    """vmap ``policy`` over a leading env axis with per-env device keys.
+
+    One call evaluates N policy instances: the per-step key is folded in on
+    the device, split into N per-env keys, and mapped alongside the stacked
+    observations (and any recurrent state) — params are broadcast.
+    """
+
+    def run(params, base_key, step, obs, *rest):
+        key = jax.random.fold_in(base_key, step)
+        keys = jax.random.split(key, obs.shape[0])
+        in_axes = (None, 0, 0) + (0,) * len(rest)
+        return jax.vmap(policy, in_axes=in_axes)(params, keys, obs, *rest)
+
+    return run
+
 
 class FeedForwardActor(Actor):
     def __init__(self, policy: PolicyFn, variable_client: VariableClient,
                  adder: Optional["Adder"] = None, rng_seed: int = 0,
                  jit: bool = True):
-        self._policy = jax.jit(policy) if jit else policy
+        fn = _folded_policy(policy)
+        self._policy = jax.jit(fn) if jit else fn
         self._client = variable_client
         self._adder = adder
         self._key = jax.random.key(rng_seed)
+        self._steps = 0
 
     def select_action(self, observation):
-        self._key, sub = jax.random.split(self._key)
-        action = self._policy(self._client.params, sub,
+        action = self._policy(self._client.params, self._key, self._steps,
                               jnp.asarray(observation))
+        self._steps = (self._steps + 1) % STEP_MOD
         return np.asarray(action)
 
     def observe_first(self, timestep: TimeStep):
@@ -58,11 +130,14 @@ class RecurrentActor(Actor):
                  variable_client: VariableClient,
                  adder: Optional["Adder"] = None, rng_seed: int = 0,
                  store_state: bool = True, jit: bool = True):
-        self._policy = jax.jit(policy) if jit else policy
+        fn = _folded_policy(policy)
+        self._policy = jax.jit(fn) if jit else fn
         self._initial_state_fn = initial_state_fn
         self._client = variable_client
         self._adder = adder
+        self._adder_extras = adder_takes_extras(adder)
         self._key = jax.random.key(rng_seed)
+        self._steps = 0
         self._state = None
         self._prev_state = None
         self._store_state = store_state
@@ -70,24 +145,22 @@ class RecurrentActor(Actor):
     def select_action(self, observation):
         if self._state is None:
             self._state = self._initial_state_fn()
-        self._key, sub = jax.random.split(self._key)
         self._prev_state = self._state
-        action, self._state = self._policy(self._client.params, sub,
-                                           jnp.asarray(observation), self._state)
+        action, self._state = self._policy(self._client.params, self._key,
+                                           self._steps,
+                                           jnp.asarray(observation),
+                                           self._state)
+        self._steps = (self._steps + 1) % STEP_MOD
         return np.asarray(action)
 
     def observe_first(self, timestep: TimeStep):
         self._state = self._initial_state_fn()
         if self._adder:
-            extras = ()
-            if self._store_state:
+            if self._adder_extras and self._store_state:
                 extras = jax.tree.map(np.asarray, self._state)
-            if hasattr(self._adder, "add_first") and isinstance(
-                    getattr(self._adder, "add_first"), Callable):
-                try:
-                    self._adder.add_first(timestep, extras)   # sequence adder
-                except TypeError:
-                    self._adder.add_first(timestep)
+                self._adder.add_first(timestep, extras)   # sequence adder
+            else:
+                self._adder.add_first(timestep)
 
     def observe(self, action, next_timestep: TimeStep):
         if self._adder:
@@ -95,3 +168,145 @@ class RecurrentActor(Actor):
 
     def update(self, wait: bool = False):
         self._client.update(wait)
+
+
+class BatchedFeedForwardActor(Actor):
+    """N environments, ONE vmapped+jitted policy dispatch per step.
+
+    ``select_action`` takes stacked observations ``(N, ...)`` and returns N
+    actions; ``observe``/``observe_first`` route each env's transitions to
+    its own adder (``adders[env_id]``) so per-env experience streams are
+    byte-identical to N single-env loops.
+    """
+
+    def __init__(self, policy: PolicyFn, variable_client: VariableClient,
+                 adders: Optional[Sequence[Optional["Adder"]]] = None,
+                 rng_seed: int = 0, jit: bool = True):
+        fn = _batched_policy(policy)
+        self._policy = jax.jit(fn) if jit else fn
+        self._client = variable_client
+        self._adders = list(adders) if adders is not None else []
+        self._key = jax.random.key(rng_seed)
+        self._steps = 0
+
+    def _adder(self, env_id: int) -> Optional["Adder"]:
+        return self._adders[env_id] if env_id < len(self._adders) else None
+
+    def _run_policy(self, observation):
+        out = self._policy(self._client.params, self._key, self._steps,
+                           jnp.asarray(observation))
+        self._steps = (self._steps + 1) % STEP_MOD
+        return out
+
+    def select_action(self, observation):
+        return np.asarray(self._run_policy(observation))
+
+    def observe_first(self, timestep: TimeStep, env_id: int = 0):
+        adder = self._adder(env_id)
+        if adder:
+            adder.add_first(timestep)
+
+    def observe(self, action, next_timestep: TimeStep, env_id: int = 0):
+        adder = self._adder(env_id)
+        if adder:
+            adder.add(action, next_timestep)
+
+    def update(self, wait: bool = False):
+        self._client.update(wait)
+
+
+class BatchedRecurrentActor(BatchedFeedForwardActor):
+    """Batched recurrent acting: stacked core state ``(N, ...)`` threaded
+    through one vmapped call; per-env state resets on that env's
+    ``observe_first`` (the auto-reset boundary)."""
+
+    def __init__(self, policy: PolicyFn, initial_state_fn: Callable[[], Any],
+                 variable_client: VariableClient,
+                 adders: Optional[Sequence[Optional["Adder"]]] = None,
+                 rng_seed: int = 0, store_state: bool = True,
+                 jit: bool = True):
+        super().__init__(policy, variable_client, adders, rng_seed, jit)
+        self._initial_state_fn = initial_state_fn
+        self._store_state = store_state
+        self._state = None
+        self._adders_extras = [adder_takes_extras(a) for a in self._adders]
+
+    def _stacked_initial_state(self, num_envs: int):
+        init = self._initial_state_fn()
+        return jax.tree.map(
+            lambda x: jnp.stack([jnp.asarray(x)] * num_envs), init)
+
+    def _state_slice(self, env_id: int):
+        return jax.tree.map(lambda s: s[env_id], self._state)
+
+    def select_action(self, observation):
+        observation = jnp.asarray(observation)
+        if self._state is None:
+            self._state = self._stacked_initial_state(observation.shape[0])
+        actions, self._state = self._policy(
+            self._client.params, self._key, self._steps, observation,
+            self._state)
+        self._steps = (self._steps + 1) % STEP_MOD
+        return np.asarray(actions)
+
+    def observe_first(self, timestep: TimeStep, env_id: int = 0):
+        if self._state is not None:
+            # reset just this env's slice of the stacked core state
+            init = self._initial_state_fn()
+            self._state = jax.tree.map(
+                lambda s, i: s.at[env_id].set(jnp.asarray(i)),
+                self._state, init)
+        adder = self._adder(env_id)
+        if adder:
+            if (env_id < len(self._adders_extras)
+                    and self._adders_extras[env_id] and self._store_state):
+                extras = jax.tree.map(np.asarray, self._initial_state_fn())
+                adder.add_first(timestep, extras)
+            else:
+                adder.add_first(timestep)
+
+
+class InferenceClientActor(Actor):
+    """SEED-style actor: policy evaluation lives in a remote
+    ``InferenceServer``; this client only steps environments and feeds
+    adders.
+
+    ``inference`` is any handle exposing ``select_action(observations)``
+    with a leading batch axis — the in-memory ``Handle`` under the local
+    launcher, a courier ``RemoteHandle`` under multiprocess.  ``update`` is
+    a no-op: the server owns the weights and refreshes them itself.
+    """
+
+    def __init__(self, inference,
+                 adder: Optional["Adder"] = None,
+                 adders: Optional[Sequence[Optional["Adder"]]] = None,
+                 batched: bool = False):
+        if adder is not None and adders is not None:
+            raise ValueError("pass either adder= or adders=, not both")
+        self._inference = inference
+        self._adders = list(adders) if adders is not None \
+            else ([adder] if adder is not None else [])
+        self._batched = batched
+
+    def _adder(self, env_id: int) -> Optional["Adder"]:
+        return self._adders[env_id] if env_id < len(self._adders) else None
+
+    def select_action(self, observation):
+        obs = np.asarray(observation)
+        if not self._batched:
+            obs = obs[None]
+        actions = np.asarray(self._inference.select_action(obs))
+        return actions if self._batched else actions[0]
+
+    def observe_first(self, timestep: TimeStep, env_id: int = 0):
+        adder = self._adder(env_id)
+        if adder:
+            adder.add_first(timestep)
+
+    def observe(self, action, next_timestep: TimeStep, env_id: int = 0):
+        adder = self._adder(env_id)
+        if adder:
+            adder.add(action, next_timestep)
+
+    def update(self, wait: bool = False):
+        pass   # the InferenceServer owns and refreshes the weights

@@ -19,6 +19,7 @@ class Agent(Actor):
         self._min_observations = min_observations
         self._observations_per_step = observations_per_step
         self._num_observations = 0
+        self._learner_steps_taken = 0
         # synchronous-safety guard: don't call a learner step that would
         # block on the dataset (queue not yet holding a full batch).
         self._can_step = can_step
@@ -26,26 +27,32 @@ class Agent(Actor):
     def select_action(self, observation):
         return self._actor.select_action(observation)
 
-    def observe_first(self, timestep: TimeStep):
-        self._actor.observe_first(timestep)
+    def observe_first(self, timestep: TimeStep, **kwargs):
+        self._actor.observe_first(timestep, **kwargs)
 
-    def observe(self, action, next_timestep: TimeStep):
+    def observe(self, action, next_timestep: TimeStep, **kwargs):
         self._num_observations += 1
-        self._actor.observe(action, next_timestep)
+        self._actor.observe(action, next_timestep, **kwargs)
 
     def update(self, wait: bool = False):
+        # Step the learner up to the schedule's target for the observations
+        # seen so far.  Target-based (rather than fire-on-modulo) so one
+        # update() after a BATCH of observations — the vectorized loop calls
+        # update once per N-env tick — runs the same number of learner steps
+        # as N per-observation updates would have.
         n = self._num_observations - self._min_observations
         if n < 0:
             return
         if self._observations_per_step >= 1:
-            num_steps = int(n % int(self._observations_per_step) == 0)
+            target = n // int(self._observations_per_step) + 1
         else:
-            num_steps = int(1 / self._observations_per_step)
+            target = (n + 1) * int(1 / self._observations_per_step)
         stepped = 0
-        for _ in range(num_steps):
+        while self._learner_steps_taken < target:
             if self._can_step is not None and not self._can_step():
                 break
             self._learner.step()
+            self._learner_steps_taken += 1
             stepped += 1
         if stepped:
             self._actor.update()

@@ -1,0 +1,236 @@
+"""SEED-style batched inference service (the Tier-2 half of batched acting).
+
+Remote actor workers stop evaluating the policy themselves: their
+``InferenceClientActor`` forwards ``select_action(observations)`` to ONE
+``InferenceServer`` service node, which coalesces concurrent requests from
+many workers into a single vmapped, jitted forward pass.  N actor processes
+then cost one model dispatch per coalescing window instead of one per actor
+per env step — the SEED-RL economics, on the Launchpad-lite graph.
+
+Coalescing window semantics
+---------------------------
+A batcher thread collects requests under two bounds:
+
+- ``max_batch_size``: total observation ROWS per forward pass (a vectorized
+  actor's request contributes ``num_envs`` rows).  A request that would
+  overflow the window waits for the next batch — requests are never split.
+- ``max_wait_ms``: once the FIRST request of a window arrives, the batch is
+  closed after at most this long even if not full.  A lone actor therefore
+  pays at most ``max_wait_ms`` extra latency; a busy service fills batches
+  before the deadline and the wait never triggers.
+
+Observation batches are zero-padded up to the next power-of-two bucket
+(≤ ``max_batch_size``) so XLA compiles a handful of shapes, not one per
+distinct request mix; padded rows are dropped before replies fan back out.
+
+The server owns the weights: a ``VariableClient`` on the learner is
+refreshed once per ``update_period`` BATCHES (not per request), so weight
+traffic scales with forward passes, not with actors.  ``stop()`` fails
+pending and future callers with ``CourierClosed`` — a ConnectionError, which
+launcher shutdown-noise classification already treats as benign once a stop
+is in flight.
+"""
+from __future__ import annotations
+
+import inspect
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.actors import STEP_MOD, _batched_policy
+from repro.core.variable import VariableClient
+
+# The RPC surface a Program node wrapping this server should declare.
+INFERENCE_INTERFACE = ("select_action", "stats")
+
+
+def policy_is_feed_forward(policy: Callable) -> bool:
+    """True when ``policy`` has the (params, key, obs) arity the batched
+    inference path can vmap; recurrent policies carry a 4th state argument
+    the server would have to track per client (not supported)."""
+    try:
+        params = inspect.signature(policy).parameters
+    except (TypeError, ValueError):
+        return True   # builtins/jitted callables: assume feed-forward
+    positional = [p for p in params.values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if any(p.kind == p.VAR_POSITIONAL for p in params.values()):
+        return True
+    return len(positional) == 3
+
+
+class _Request:
+    __slots__ = ("observations", "rows", "event", "result", "error")
+
+    def __init__(self, observations: np.ndarray):
+        self.observations = observations
+        self.rows = observations.shape[0]
+        self.event = threading.Event()
+        self.result: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+
+
+class InferenceServer:
+    """Coalesce ``select_action`` requests into one batched forward pass.
+
+    ``policy`` is the per-example behaviour policy ``(params, key, obs) ->
+    action`` every builder already provides; ``variable_source`` is anything
+    with ``get_variables`` (the learner, or a handle to it).
+    """
+
+    def __init__(self, policy: Callable, variable_source,
+                 max_batch_size: int = 64, max_wait_ms: float = 2.0,
+                 update_period: int = 10, rng_seed: int = 0,
+                 jit: bool = True):
+        if max_batch_size < 1:
+            raise ValueError(f"max_batch_size must be >= 1, "
+                             f"got {max_batch_size}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        if not policy_is_feed_forward(policy):
+            raise ValueError(
+                "InferenceServer batches feed-forward policies "
+                "(params, key, obs); recurrent policies would need per-client "
+                "state tracking — use inference='local' for those agents")
+
+        # the SAME key-derivation scheme the batched actors use (fold_in the
+        # batch counter on device, split per-row keys, vmap)
+        batched = _batched_policy(policy)
+        self._policy = jax.jit(batched) if jit else batched
+        self._client = VariableClient(variable_source,
+                                      update_period=max(update_period, 1))
+        self._max_batch = int(max_batch_size)
+        self._max_wait_s = float(max_wait_ms) / 1000.0
+        self._key = jax.random.key(rng_seed)
+        self._batch_counter = 0
+
+        self._cond = threading.Condition()
+        self._pending: List[_Request] = []
+        self._stopped = False
+        self._stats = {"requests": 0, "rows": 0, "batches": 0,
+                       "padded_rows": 0}
+        self._thread = threading.Thread(target=self._batch_loop,
+                                        name="inference_server",
+                                        daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- RPC side
+    def select_action(self, observations) -> np.ndarray:
+        """Batch in, batch out: ``(k, *obs_shape) -> (k, *action_shape)``.
+
+        Blocks until this request's rows come back from a coalesced forward
+        pass.  Raises ``CourierClosed`` once the server is stopped.
+        """
+        from repro.distributed.courier import CourierClosed
+
+        obs = np.asarray(observations)
+        if obs.shape[0] > self._max_batch:
+            raise ValueError(
+                f"request of {obs.shape[0]} rows exceeds max_batch_size="
+                f"{self._max_batch}")
+        request = _Request(obs)
+        with self._cond:
+            if self._stopped:
+                raise CourierClosed("inference server stopped")
+            self._pending.append(request)
+            self._cond.notify_all()
+        request.event.wait()
+        if request.error is not None:
+            raise request.error
+        return request.result
+
+    def stats(self) -> Dict[str, Any]:
+        with self._cond:
+            s = dict(self._stats)
+        s["avg_rows_per_batch"] = s["rows"] / max(s["batches"], 1)
+        s["max_batch_size"] = self._max_batch
+        s["max_wait_ms"] = self._max_wait_s * 1000.0
+        return s
+
+    def stop(self):
+        with self._cond:
+            self._stopped = True
+            self._cond.notify_all()
+        self._thread.join(timeout=5)
+
+    # ------------------------------------------------------- batcher thread
+    def _collect(self) -> List[_Request]:
+        """Block until a coalescing window closes; return its requests."""
+        with self._cond:
+            batch: List[_Request] = []
+            rows = 0
+            deadline = None
+            while True:
+                while (self._pending
+                       and rows + self._pending[0].rows <= self._max_batch):
+                    request = self._pending.pop(0)
+                    batch.append(request)
+                    rows += request.rows
+                if self._stopped or rows >= self._max_batch:
+                    return batch
+                if not batch:
+                    # idle: nothing to coalesce yet, no deadline running
+                    self._cond.wait(0.1)
+                    continue
+                if self._pending:
+                    return batch   # head request would overflow the window
+                if deadline is None:
+                    deadline = time.monotonic() + self._max_wait_s
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return batch
+                self._cond.wait(remaining)
+
+    def _run_batch(self, batch: List[_Request]):
+        try:
+            rows = sum(r.rows for r in batch)
+            obs = np.concatenate([r.observations for r in batch], axis=0)
+            # pad to a power-of-two bucket: a bounded set of compiled shapes
+            bucket = 1
+            while bucket < rows:
+                bucket *= 2
+            bucket = min(bucket, self._max_batch)
+            if obs.shape[0] < bucket:
+                pad = np.zeros((bucket - obs.shape[0],) + obs.shape[1:],
+                               obs.dtype)
+                obs = np.concatenate([obs, pad], axis=0)
+            self._client.update()   # period counts BATCHES, not requests
+            actions = np.asarray(self._policy(
+                self._client.params, self._key, self._batch_counter, obs))
+            self._batch_counter = (self._batch_counter + 1) % STEP_MOD
+            with self._cond:
+                self._stats["batches"] += 1
+                self._stats["requests"] += len(batch)
+                self._stats["rows"] += rows
+                self._stats["padded_rows"] += bucket - rows
+            offset = 0
+            for request in batch:
+                request.result = actions[offset:offset + request.rows]
+                offset += request.rows
+                request.event.set()
+        except BaseException as e:   # noqa: BLE001 — forwarded to callers
+            for request in batch:
+                request.error = e
+                request.event.set()
+
+    def _fail_pending(self):
+        from repro.distributed.courier import CourierClosed
+
+        with self._cond:
+            pending, self._pending = self._pending, []
+        for request in pending:
+            request.error = CourierClosed("inference server stopped")
+            request.event.set()
+
+    def _batch_loop(self):
+        while True:
+            batch = self._collect()
+            if batch:
+                self._run_batch(batch)
+            with self._cond:
+                if self._stopped:
+                    break
+        self._fail_pending()

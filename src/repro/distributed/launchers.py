@@ -160,12 +160,16 @@ class LauncherBase(Launcher):
     def _classify_as_shutdown_noise(self, e: BaseException) -> bool:
         """Once a stop is in flight (user- or fail-fast-initiated — the flag
         is always set before any table is stopped), rate-limiter wakeups are
-        shutdown noise, as is anything raised after the user asked us to
-        shut down.  A "stopped" error with no stop in flight is a real
-        worker death and must be surfaced."""
+        shutdown noise, as are connection teardowns (a stopped
+        ``InferenceServer`` wakes blocked ``select_action`` callers with
+        ``CourierClosed`` — mirroring the child-side classifier) and
+        anything raised after the user asked us to shut down.  A "stopped"
+        error with no stop in flight is a real worker death and must be
+        surfaced."""
         from repro.replay.rate_limiter import RateLimiterTimeout
         return self._stop.is_set() and (
-            self._user_stopped or isinstance(e, RateLimiterTimeout))
+            self._user_stopped
+            or isinstance(e, (RateLimiterTimeout, ConnectionError)))
 
     def _record_error(self, e: BaseException):
         with self._errors_lock:

@@ -3,3 +3,4 @@ from repro.envs.cartpole import CartpoleSwingup, PendulumSwingup  # noqa: F401
 from repro.envs.catch import Catch  # noqa: F401
 from repro.envs.deep_sea import DeepSea  # noqa: F401
 from repro.envs.token_lm import TokenChain  # noqa: F401
+from repro.envs.vector import VectorEnv, split_timestep, stack_timesteps  # noqa: F401

@@ -46,6 +46,22 @@ class ExperimentConfig:
         on threads) or ``"multiprocess"`` (each worker node in its own OS
         process with courier RPC edges; requires ``builder_factory`` and
         ``environment_factory`` to be picklable, i.e. module-level).
+    num_envs_per_actor: environments per actor (None = defer to the
+        builder's options; N > 1 = each actor is a ``VectorEnv`` + batched
+        actor evaluating ONE vmapped policy call per N env transitions —
+        single-process and distributed runs alike).
+    inference: policy-evaluation placement for distributed runs (None =
+        defer to the builder's options) — ``"local"`` (each actor holds its
+        own policy copy) or ``"server"`` (SEED-style: one ``InferenceServer``
+        service node coalesces ``select_action`` RPCs from every actor
+        worker into batched forward passes).  Single-process runs always
+        evaluate locally.
+    inference_max_batch_size: the server's coalescing window in observation
+        ROWS per forward pass (None = one full fleet sweep,
+        ``num_actors * num_envs_per_actor``; ``num_envs_per_actor`` disables
+        coalescing — every request dispatches alone).
+    inference_max_wait_ms: how long the server holds an open window for
+        more requests, measured from the window's first request.
     """
 
     builder_factory: BuilderFactory
@@ -61,6 +77,10 @@ class ExperimentConfig:
     num_replay_shards: Optional[int] = None
     prefetch_size: Optional[int] = None
     launcher: str = "local"
+    num_envs_per_actor: Optional[int] = None
+    inference: Optional[str] = None
+    inference_max_batch_size: Optional[int] = None
+    inference_max_wait_ms: float = 2.0
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -80,6 +100,21 @@ class ExperimentConfig:
         if not self.launcher or not isinstance(self.launcher, str):
             raise ValueError(f"launcher must be a backend name, "
                              f"got {self.launcher!r}")
+        if self.num_envs_per_actor is not None \
+                and self.num_envs_per_actor < 1:
+            raise ValueError(f"num_envs_per_actor must be >= 1, "
+                             f"got {self.num_envs_per_actor}")
+        if self.inference is not None \
+                and self.inference not in ("local", "server"):
+            raise ValueError(f"inference must be 'local' or 'server', "
+                             f"got {self.inference!r}")
+        if self.inference_max_batch_size is not None \
+                and self.inference_max_batch_size < 1:
+            raise ValueError(f"inference_max_batch_size must be >= 1, "
+                             f"got {self.inference_max_batch_size}")
+        if self.inference_max_wait_ms < 0:
+            raise ValueError(f"inference_max_wait_ms must be >= 0, "
+                             f"got {self.inference_max_wait_ms}")
 
 
 @dataclasses.dataclass

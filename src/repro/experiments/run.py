@@ -49,32 +49,68 @@ def _make_checkpointer(config: ExperimentConfig):
 def run_experiment(config: ExperimentConfig,
                    num_episodes: Optional[int] = None) -> ExperimentResult:
     """Single-process run: the env loop drives an Agent built from the
-    config's builder; eval and checkpointing happen on their cadences."""
+    config's builder; eval and checkpointing happen on their cadences.
+
+    With ``num_envs_per_actor > 1`` the train loop is a
+    ``VectorizedEnvironmentLoop`` over a ``VectorEnv`` — N auto-resetting
+    envs, one vmapped policy dispatch per tick — run in chunks of whole
+    episodes so the eval/checkpoint cadences keep their per-episode meaning.
+    """
     env = config.environment_factory(config.seed)
     spec = make_environment_spec(env)
     builder = config.builder_factory(spec)
+    num_envs = (config.num_envs_per_actor
+                if config.num_envs_per_actor is not None
+                else builder.options.num_envs_per_actor)
     agent = make_agent(builder, seed=config.seed,
-                       num_replay_shards=config.num_replay_shards)
+                       num_replay_shards=config.num_replay_shards,
+                       num_envs=num_envs)
     counter = Counter()
     logger = (config.logger_factory("train")
               if config.logger_factory else None)
-    loop = EnvironmentLoop(env, agent, counter=counter, logger=logger,
-                           label="actor")
+    if num_envs > 1:
+        from repro.core import VectorizedEnvironmentLoop
+        from repro.envs.vector import VectorEnv
+        vector_env = VectorEnv(config.environment_factory, num_envs,
+                               seed=config.seed)
+        loop = VectorizedEnvironmentLoop(vector_env, agent, counter=counter,
+                                         logger=logger, label="actor")
+    else:
+        loop = EnvironmentLoop(env, agent, counter=counter, logger=logger,
+                               label="actor")
     checkpointer = _make_checkpointer(config)
     last_ckpt_step = 0
 
     episodes = config.num_episodes if num_episodes is None else num_episodes
     returns, steps, wall, evals = [], [], [], []
     total_steps = 0
+    episodes_done = 0
+    next_eval = config.eval_every or 0
     t0 = time.time()
-    for episode in range(episodes):
-        result = loop.run_episode()
-        total_steps += result["episode_length"]
-        returns.append(result["episode_return"])
-        steps.append(total_steps)
-        wall.append(time.time() - t0)
+    while episodes_done < episodes:
+        if num_envs > 1:
+            # chunk = one eval period (or everything left): the vectorized
+            # loop returns one result per COMPLETED episode.  The step cap
+            # bounds the chunk too — don't overrun max_actor_steps by a
+            # whole chunk of episodes.
+            chunk = min(config.eval_every or episodes - episodes_done,
+                        episodes - episodes_done)
+            remaining_steps = (None if config.max_actor_steps is None
+                               else max(config.max_actor_steps - total_steps,
+                                        1))
+            chunk_results = loop.run(num_episodes=chunk,
+                                     num_steps=remaining_steps)
+        else:
+            chunk_results = [loop.run_episode()]
+        for result in chunk_results:
+            total_steps += result["episode_length"]
+            returns.append(result["episode_return"])
+            steps.append(total_steps)
+            wall.append(time.time() - t0)
+        episodes_done += len(chunk_results)
         if config.eval_every and config.eval_episodes > 0 \
-                and (episode + 1) % config.eval_every == 0:
+                and episodes_done >= next_eval:
+            next_eval += config.eval_every
             evals.append((total_steps,
                           _evaluate(config, builder, agent.learner,
                                     counter=counter)))
@@ -124,7 +160,13 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   prefetch_size=config.prefetch_size,
                                   launcher=config.launcher,
                                   builder_factory=config.builder_factory,
-                                  spec=spec)
+                                  spec=spec,
+                                  num_envs_per_actor=config.num_envs_per_actor,
+                                  inference=config.inference,
+                                  inference_max_batch_size=(
+                                      config.inference_max_batch_size),
+                                  inference_max_wait_ms=(
+                                      config.inference_max_wait_ms))
     checkpointer = _make_checkpointer(config)
     t0 = time.time()
     try:
@@ -147,6 +189,8 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
         }
         if hasattr(dist.table, "stats"):   # ShardedReplay: per-shard view
             extras["replay"] = dist.table.stats()
+        if dist.inference_server is not None:
+            extras["inference"] = dist.inference_server.stats()
         if with_evaluator:
             extras["evaluator_returns"] = dist.evaluator_returns()
     finally:
