@@ -1,0 +1,109 @@
+"""Fig 16: learner scaling — aggregate SGD throughput vs learner replicas.
+
+The multi-learner half of the §2.4 scaling story: ``num_learner_replicas=N``
+places one learner replica per replay shard (shard-affine datasets, so no
+two replicas contend on one table lock) with a ``ParameterServer`` merging
+params/opt-state every ``learner_average_period`` steps.  This figure
+sweeps the replica count through the UNCHANGED ``DQNBuilder`` and reports
+aggregate learner steps/sec (summed over replicas) plus averaging rounds.
+
+What to expect: each replica is its own SGD stream over its own shard, so
+aggregate throughput scales until cores run out — on a 1-core CI container
+the replicas time-share the interpreter and the figure instead documents
+the averaging overhead (a barrier + pytree mean every period).  The honest
+caveat either way: N replicas averaging every P steps is NOT N× the
+gradient quality of one stream; the figure reports throughput, the
+learning-quality evidence lives in ``tests/test_multi_learner.py``.
+
+    python benchmarks/fig16_learner_scaling.py            # full sweep
+    python benchmarks/fig16_learner_scaling.py --smoke    # CI mechanics check
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import csv_row
+from repro.agents.builders import make_distributed_agent
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import make_environment_spec
+from repro.envs import Catch
+
+REPLICA_COUNTS = (1, 2, 4)
+AVERAGE_PERIOD = 20
+# The stop criterion is aggregate SGD steps, not actor steps: the figure
+# measures learner throughput, and an actor-step target races the first
+# jit compile on fast hosts (the run can end before a replica ever steps).
+TARGET_SGD_STEPS = 2000
+SMOKE_TARGET_SGD_STEPS = 80
+TIMEOUT_S = 180.0
+
+
+# Module-level factories: picklable for process-crossing backends.
+def builder_factory(spec):
+    # samples_per_insert=0 -> MinSize limiter: replicas step unthrottled,
+    # so the figure measures SGD throughput, not the SPI schedule.  A low
+    # replay floor lets replicas start stepping (and finish their first
+    # jit compile) well inside a short smoke window.
+    return DQNBuilder(spec, DQNConfig(min_replay_size=32,
+                                      samples_per_insert=0.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def env_factory(seed):
+    return Catch(seed=seed)
+
+
+def run_one(num_replicas: int, target_sgd_steps: int, average_period: int):
+    spec = make_environment_spec(env_factory(0))
+    builder = builder_factory(spec)
+    dist = make_distributed_agent(
+        builder, env_factory, num_actors=2, seed=0,
+        builder_factory=builder_factory,
+        num_learner_replicas=num_replicas,
+        learner_average_period=average_period)
+    t0 = time.time()
+    try:
+        while time.time() - t0 < TIMEOUT_S:
+            stats = dist.learner_stats()
+            if sum(stats["per_replica_steps"]) >= target_sgd_steps:
+                break
+            time.sleep(0.1)
+        stats = dist.learner_stats()
+        wall = time.time() - t0
+    finally:
+        dist.stop()
+    total_sgd = sum(stats["per_replica_steps"])
+    return {"total_sgd": total_sgd, "wall": wall,
+            "sgd_per_sec": total_sgd / max(wall, 1e-9),
+            "rounds": stats["rounds"],
+            "per_replica": stats["per_replica_steps"]}
+
+
+def main(smoke: bool = False):
+    target = SMOKE_TARGET_SGD_STEPS if smoke else TARGET_SGD_STEPS
+    replica_counts = (1, 2) if smoke else REPLICA_COUNTS
+    results = {}
+    for n in replica_counts:
+        r = run_one(n, target, AVERAGE_PERIOD)
+        results[n] = r
+        csv_row(f"fig16/replicas{n}/sgd_steps_per_sec",
+                round(r["sgd_per_sec"], 1))
+        csv_row(f"fig16/replicas{n}/total_sgd_steps", r["total_sgd"])
+        csv_row(f"fig16/replicas{n}/averaging_rounds", r["rounds"])
+        if smoke:
+            assert r["total_sgd"] > 0, (
+                f"{n} replica(s): learner never stepped")
+            assert all(s > 0 for s in r["per_replica"]), (
+                f"{n} replica(s): a replica never stepped: {r}")
+            if n > 1:
+                assert r["rounds"] >= 1, (
+                    f"{n} replicas never completed an averaging round: {r}")
+    if smoke:
+        print("fig16 smoke OK:", {n: r["per_replica"]
+                                  for n, r in results.items()})
+    return results
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

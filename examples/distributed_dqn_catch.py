@@ -9,6 +9,9 @@ actor in its own OS process with courier RPC edges, no other change.
       --actors 4 --replay-shards 4 --prefetch 4   # sharded replay service
   PYTHONPATH=src python examples/distributed_dqn_catch.py \
       --actors 4 --launcher multiprocess          # one process per actor
+  PYTHONPATH=src python examples/distributed_dqn_catch.py \
+      --actors 4 --learner-replicas 2             # one learner per shard,
+                                                  # parameter averaging
 
 Factories are module-level (not lambdas): process-crossing backends pickle
 them into the spawned actor processes.
@@ -41,6 +44,12 @@ def main():
                    choices=["local", "multiprocess"],
                    help="execution backend: threads, or one OS process "
                         "per actor with courier RPC edges")
+    p.add_argument("--learner-replicas", type=int, default=None,
+                   help="learner replicas, one per replay shard, merged by "
+                        "parameter averaging (actors still see one logical "
+                        "learner)")
+    p.add_argument("--average-period", type=int, default=None,
+                   help="per-replica SGD steps between averaging rounds")
     args = p.parse_args()
 
     cfg = DQNConfig(min_replay_size=100, samples_per_insert=8.0,
@@ -54,6 +63,8 @@ def main():
         num_replay_shards=args.replay_shards,
         prefetch_size=args.prefetch,
         launcher=args.launcher,
+        num_learner_replicas=args.learner_replicas,
+        learner_average_period=args.average_period,
     )
     print(f"launching [{args.launcher}]: {args.actors} actors + learner "
           f"+ replay[{args.replay_shards} shard(s)] "
@@ -72,6 +83,12 @@ def main():
         for shard in ex["replay"]["per_shard"]:
             print(f"  {shard['name']}: size={shard['size']} "
                   f"inserts={shard['inserts']} samples={shard['samples']}")
+    if "learners" in ex:
+        lrn = ex["learners"]
+        print(f"  learners: {lrn['num_replicas']} replica(s), "
+              f"{lrn['rounds']} averaging round(s) "
+              f"(period {lrn['average_period']}), per-replica steps "
+              f"{lrn['per_replica_steps']}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
-# One-step reproducible CI: deps + tier-1 tests + a ~60s run_experiment
-# smoke on Catch through the repro.experiments API.
+# Two-tier reproducible CI:
 #
-#   bash scripts/ci.sh            # full suite + smoke
-#   SKIP_TESTS=1 bash scripts/ci.sh   # smoke only
+#   tier 1 (fast, every push): deps + `pytest -m "not slow"` — includes the
+#       multi-learner parity net, so averaging regressions surface on every
+#       run without paying for the multiprocess smokes.
+#   slow tier: `pytest -m slow` (multiprocess learning smokes) + the
+#       benchmark --smoke mechanics checks.
+#
+#   bash scripts/ci.sh                 # both tiers
+#   SKIP_TESTS=1 bash scripts/ci.sh    # benchmarks + script smokes only
+#   SKIP_SLOW=1 bash scripts/ci.sh    # fast tier only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,8 +21,18 @@ python -m pip install -q -r requirements.txt -r requirements-dev.txt \
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ -z "${SKIP_TESTS:-}" ]]; then
-    echo "[ci] tier-1: python -m pytest -q"
-    python -m pytest -q
+    echo "[ci] tier-1 (fast): python -m pytest -q -m 'not slow'"
+    python -m pytest -q -m "not slow"
+fi
+
+if [[ -n "${SKIP_SLOW:-}" ]]; then
+    echo "[ci] SKIP_SLOW set — fast tier only"
+    exit 0
+fi
+
+if [[ -z "${SKIP_TESTS:-}" ]]; then
+    echo "[ci] slow tier: python -m pytest -q -m slow"
+    python -m pytest -q -m slow
 fi
 
 echo "[ci] smoke: replay sharding throughput (fig13 --smoke)"
@@ -30,6 +46,10 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 echo "[ci] smoke: vectorized acting + inference batching (fig15 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig15_inference_batching.py --smoke
+
+echo "[ci] smoke: multi-learner replica scaling (fig16 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig16_learner_scaling.py --smoke
 
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__

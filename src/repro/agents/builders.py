@@ -13,7 +13,6 @@ config-driven run API that examples, benchmarks, and tests use.
 """
 from __future__ import annotations
 
-import itertools
 import threading
 from typing import List, Optional
 
@@ -26,6 +25,8 @@ from repro.core.inference import policy_is_feed_forward
 from repro.distributed.launchers import JoinTimeout, get_launcher
 from repro.distributed.program import Program, Replica
 from repro.envs.vector import VectorEnv
+from repro.learners import (PARAM_SERVER_INTERFACE, LearnerReplicaWorker,
+                            MultiLearner, ParameterServer)
 from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
 from repro.replay.service import REPLAY_INTERFACE
 
@@ -43,9 +44,78 @@ def _effective_shards(options, num_replay_shards):
     return _resolve(num_replay_shards, options.num_replay_shards)
 
 
+def _effective_replicas(options, num_learner_replicas):
+    """(num_replicas, engaged): multi-learner machinery is engaged when the
+    caller asked for it explicitly — even num_learner_replicas=1, which the
+    parity net proves equivalent to the plain path — or the builder's
+    options default to more than one replica.  Offline builders keep the
+    plain learner (their fixed dataset has no shards to give replicas
+    affinity over); explicitly asking them for replicas is a config-time
+    error, not a silent downgrade."""
+    if options.offline:
+        if num_learner_replicas is not None and num_learner_replicas > 1:
+            raise ValueError(
+                f"offline builders cannot run num_learner_replicas="
+                f"{num_learner_replicas}: the fixed dataset has no replay "
+                f"shards to give replicas affinity over")
+        return 1, False
+    replicas = _resolve(num_learner_replicas, options.num_learner_replicas)
+    engaged = (num_learner_replicas is not None
+               or options.num_learner_replicas > 1)
+    return replicas, engaged
+
+
+def _replica_sharding(options, num_replay_shards, num_replicas):
+    """Shard count for a multi-learner run: replica i consumes shard i
+    exclusively (shard affinity), so the counts must match — an unset/1
+    shard count follows the replica count."""
+    shards = _effective_shards(options, num_replay_shards)
+    if num_replicas <= 1:
+        return shards
+    if shards == 1:
+        return num_replicas
+    if shards != num_replicas:
+        raise ValueError(
+            f"num_learner_replicas={num_replicas} needs one replay shard "
+            f"per replica (shard affinity), got num_replay_shards={shards}; "
+            f"leave num_replay_shards unset or make the counts equal")
+    return shards
+
+
+def _make_replica_learners(builder, table, num_replicas, prefetch=0):
+    """One learner per replay shard, each consuming only its own shard's
+    dataset (local shard keys, so priority updates route shard-directly)
+    — optionally through a per-replica ``PrefetchingDataset``.  Returns
+    (learners, datasets, shards); datasets[i] is None unless prefetching.
+    """
+    if num_replicas > 1:
+        if not isinstance(table, ShardedReplay) \
+                or table.num_shards != num_replicas:
+            raise ValueError(
+                f"{num_replicas} learner replicas need a ShardedReplay "
+                f"with exactly {num_replicas} shards, got {table!r}")
+        shards = list(table.shards)
+    else:
+        shards = [table]
+    learners, datasets = [], []
+    for shard in shards:
+        iterator = builder.make_dataset(shard)
+        dataset = None
+        if prefetch > 0:
+            dataset = PrefetchingDataset.over_iterator(
+                iterator, prefetch_size=prefetch)
+            iterator = dataset
+        learners.append(builder.make_learner(
+            iterator, priority_update_cb=shard.update_priorities))
+        datasets.append(dataset)
+    return learners, datasets, shards
+
+
 def make_agent(builder: AgentBuilder, seed: int = 0,
                num_replay_shards: Optional[int] = None,
-               num_envs: Optional[int] = None) -> Agent:
+               num_envs: Optional[int] = None,
+               num_learner_replicas: Optional[int] = None,
+               learner_average_period: Optional[int] = None) -> Agent:
     """Synchronous single-process agent: actor and learner in lockstep.
 
     Sharded replay is honoured here too; prefetching is not — the lockstep
@@ -53,14 +123,29 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
     synchronously inside the learner step.  With ``num_envs > 1`` the actor
     is the builder's BATCHED actor fanning out to one adder per env — drive
     it with a ``VectorEnv`` + ``VectorizedEnvironmentLoop``.
+
+    ``num_learner_replicas`` routes learning through a ``MultiLearner``:
+    one replica per replay shard, stepped sequentially round-robin by the
+    agent's schedule, with parameter averaging every
+    ``learner_average_period`` per-replica steps.
     """
     options = builder.options
-    num_shards = _effective_shards(options, num_replay_shards)
+    replicas, multi = _effective_replicas(options, num_learner_replicas)
+    period = _resolve(learner_average_period,
+                      options.learner_average_period)
+    num_shards = (_replica_sharding(options, num_replay_shards, replicas)
+                  if multi else _effective_shards(options, num_replay_shards))
     num_envs = _resolve(num_envs, options.num_envs_per_actor)
     table = make_replay_shards(builder.make_replay, num_shards)
-    iterator = builder.make_dataset(table)
-    learner = builder.make_learner(
-        iterator, priority_update_cb=table.update_priorities)
+    shard_tables = None
+    if multi:
+        replica_learners, _, shard_tables = _make_replica_learners(
+            builder, table, replicas)
+        learner = MultiLearner(replica_learners, average_period=period)
+    else:
+        iterator = builder.make_dataset(table)
+        learner = builder.make_learner(
+            iterator, priority_update_cb=table.update_priorities)
     client = VariableClient(learner,
                             update_period=options.variable_update_period)
     policy = builder.make_policy(evaluation=False)
@@ -72,10 +157,22 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                                    builder.make_adder(table), seed)
     consuming = table.selector.consumes
 
-    def can_step():
-        if table.rate_limiter.would_block_sample():
-            return False
-        return table.size() >= options.batch_size if consuming else True
+    if multi and replicas > 1:
+        def can_step():
+            # a sequential multi-learner step samples ONE shard — the
+            # round-robin cursor's — so gate on that shard: the aggregate
+            # view can satisfy batch_size while the cursor's shard cannot
+            # serve a batch, which would hang the lockstep loop inside a
+            # blocking sample (no actor runs while the learner steps).
+            shard = shard_tables[learner.next_replica]
+            if shard.rate_limiter.would_block_sample():
+                return False
+            return shard.size() >= options.batch_size if consuming else True
+    else:
+        def can_step():
+            if table.rate_limiter.would_block_sample():
+                return False
+            return table.size() >= options.batch_size if consuming else True
 
     return Agent(actor, learner,
                  min_observations=options.min_observations,
@@ -101,35 +198,16 @@ def _builder_of(builder):
         else builder
 
 
-class _LearnerWorker:
-    """Learner node: a service/worker hybrid — steps SGD until stopped
-    (the rate limiter blocks us when we get ahead of the actors, §2.5) and
-    serves ``get_variables`` to the actor pool (over courier when actors
-    live in other processes)."""
+class _LearnerWorker(LearnerReplicaWorker):
+    """Single-learner node: a service/worker hybrid — steps SGD until
+    stopped (the rate limiter blocks us when we get ahead of the actors,
+    §2.5) and serves ``get_variables`` to the actor pool (over courier when
+    actors live in other processes).  The degenerate one-replica,
+    no-rendezvous case of ``LearnerReplicaWorker`` — one run loop, one set
+    of stop/exception semantics."""
 
     def __init__(self, learner, max_steps: Optional[int] = None):
-        self.learner = learner
-        self.max_steps = max_steps
-        self._stop = threading.Event()
-
-    def run(self):
-        for i in itertools.count():
-            if self._stop.is_set():
-                return
-            if self.max_steps is not None and i >= self.max_steps:
-                return
-            try:
-                self.learner.step()
-            except Exception:
-                if self._stop.is_set():
-                    return
-                raise
-
-    def stop(self):
-        self._stop.set()
-
-    def get_variables(self, names=()):
-        return self.learner.get_variables(names)
+        super().__init__(learner, param_server=None, max_steps=max_steps)
 
 
 class _ActorWorker:
@@ -246,13 +324,13 @@ class DistributedAgent:
     """Handle onto a launched distributed program."""
 
     def __init__(self, program, launcher, learner, table, counter,
-                 dataset=None, eval_log=None, inference_server=None):
+                 datasets=(), eval_log=None, inference_server=None):
         self.program = program
         self.launcher = launcher
         self.learner = learner
         self.table = table
         self.counter = counter
-        self.dataset = dataset
+        self.datasets = [d for d in datasets if d is not None]
         self.eval_log = eval_log
         self.inference_server = inference_server
 
@@ -261,14 +339,26 @@ class DistributedAgent:
         backends; the evaluator may live in another process)."""
         return self.eval_log.items() if self.eval_log is not None else []
 
+    def learner_stats(self) -> Optional[dict]:
+        """Per-replica step counts + averaging rounds when the learner is a
+        multi-learner (``result.extras['learners']``); None otherwise."""
+        stats = getattr(self.learner, "stats", None)
+        return stats() if callable(stats) else None
+
     def stop(self):
         # launcher first: it marks the shutdown as user-initiated (so late
         # rate-limiter wakeups are noise, not worker errors) and stops every
         # node, including the replay shards.
         self.launcher.stop()
         self.table.stop()
-        if self.dataset is not None and hasattr(self.dataset, "stop"):
-            self.dataset.stop()
+        for dataset in self.datasets:
+            # close (not just stop): sampler threads are joined and the
+            # queue drained, so sequential runs in one process cannot
+            # accumulate leaked prefetch threads.
+            if hasattr(dataset, "close"):
+                dataset.close()
+            elif hasattr(dataset, "stop"):
+                dataset.stop()
         try:
             self.launcher.join(timeout=30)
         except JoinTimeout as e:
@@ -292,7 +382,9 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            num_envs_per_actor: Optional[int] = None,
                            inference: Optional[str] = None,
                            inference_max_batch_size: Optional[int] = None,
-                           inference_max_wait_ms: float = 2.0) -> DistributedAgent:
+                           inference_max_wait_ms: float = 2.0,
+                           num_learner_replicas: Optional[int] = None,
+                           learner_average_period: Optional[int] = None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
 
@@ -315,11 +407,23 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     evaluation in a SEED-style ``InferenceServer`` service node that
     coalesces ``select_action`` RPCs from all actor workers into batched
     forward passes.  All four default to the builder's ``BuilderOptions``.
+
+    ``num_learner_replicas > 1`` places one ``learner/replica_i`` node per
+    replay shard (replica i consumes shard i's — optionally prefetching —
+    dataset exclusively) plus a ``learner/param_server`` service that
+    merges replica params/opt-state every ``learner_average_period``
+    per-replica steps; the ``learner`` endpoint keeps serving
+    ``get_variables`` unchanged, so actors, evaluators, and checkpoints
+    see ONE logical learner.
     """
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
     options = builder.options
-    num_shards = _effective_shards(options, num_replay_shards)
+    replicas, multi = _effective_replicas(options, num_learner_replicas)
+    period = _resolve(learner_average_period,
+                      options.learner_average_period)
+    num_shards = (_replica_sharding(options, num_replay_shards, replicas)
+                  if multi else _effective_shards(options, num_replay_shards))
     prefetch = _resolve(prefetch_size, options.prefetch_size)
     num_envs = _resolve(num_envs_per_actor, options.num_envs_per_actor)
     inference_mode = _resolve(inference, options.inference)
@@ -328,13 +432,31 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                          f"got {inference_mode!r}")
 
     table = make_replay_shards(builder.make_replay, num_shards)
-    iterator = builder.make_dataset(table)
-    if prefetch > 0:
-        iterator = PrefetchingDataset.over_iterator(iterator,
-                                                    prefetch_size=prefetch)
-    learner = builder.make_learner(
-        iterator, priority_update_cb=table.update_priorities)
-    worker = _LearnerWorker(learner, max_steps=max_learner_steps)
+    datasets: List = []
+    param_server = None
+    replica_workers: List[LearnerReplicaWorker] = []
+    if multi:
+        replica_learners, datasets, shards = _make_replica_learners(
+            builder, table, replicas, prefetch=prefetch)
+        param_server = ParameterServer(replicas, period)
+        replica_workers = [
+            LearnerReplicaWorker(replica_learner, param_server, i, period,
+                                 max_steps=max_learner_steps,
+                                 dataset=datasets[i], shard=shards[i])
+            for i, replica_learner in enumerate(replica_learners)]
+        learner = MultiLearner(replica_learners, average_period=period,
+                               param_server=param_server,
+                               workers=replica_workers)
+        worker = None
+    else:
+        iterator = builder.make_dataset(table)
+        if prefetch > 0:
+            iterator = PrefetchingDataset.over_iterator(
+                iterator, prefetch_size=prefetch)
+            datasets = [iterator]
+        learner = builder.make_learner(
+            iterator, priority_update_cb=table.update_priorities)
+        worker = _LearnerWorker(learner, max_steps=max_learner_steps)
 
     inference_server = None
     if inference_mode == "server":
@@ -367,7 +489,7 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                 f"vectorized actor's request of num_envs_per_actor="
                 f"{num_envs} rows (requests are never split)")
         inference_server = InferenceServer(
-            policy, worker,
+            policy, worker if worker is not None else learner,
             max_batch_size=max_batch,
             max_wait_ms=inference_max_wait_ms,
             update_period=options.variable_update_period,
@@ -393,9 +515,23 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                              role="service", interface=REPLAY_INTERFACE)
     replay_handle = program.add_node("replay", lambda: table, role="service",
                                      interface=REPLAY_INTERFACE)
-    learner_handle = program.add_node("learner", lambda: worker,
-                                      role="service",
-                                      interface=("get_variables",))
+    if multi:
+        # replica i has shard affinity with replay/shard_i; the param
+        # server is the averaging rendezvous; the "learner" endpoint stays
+        # the one variable source actors and evaluators already use.
+        program.add_node("learner/param_server", lambda: param_server,
+                         role="service", interface=PARAM_SERVER_INTERFACE)
+        for i, replica_worker in enumerate(replica_workers):
+            program.add_node(f"learner/replica_{i}",
+                             lambda w=replica_worker: w, role="service",
+                             interface=("get_variables",))
+        learner_handle = program.add_node("learner", lambda: learner,
+                                          role="service",
+                                          interface=("get_variables",))
+    else:
+        learner_handle = program.add_node("learner", lambda: worker,
+                                          role="service",
+                                          interface=("get_variables",))
     inference_handle = None
     if inference_server is not None:
         inference_handle = program.add_node(
@@ -419,7 +555,7 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     launched = launcher_cls(program).launch()
     agent = DistributedAgent(program, launched, learner, table,
                              program.resolve("counter"),
-                             dataset=iterator if prefetch > 0 else None,
+                             datasets=datasets,
                              eval_log=(program.resolve("eval_log")
                                        if with_evaluator else None),
                              inference_server=inference_server)

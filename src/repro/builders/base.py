@@ -56,6 +56,13 @@ class BuilderOptions:
         ``"local"`` (each actor evaluates its own policy copy) or
         ``"server"`` (SEED-style: actors RPC a central ``InferenceServer``
         that coalesces requests into batched forward passes).
+    num_learner_replicas: learner replicas the execution layer builds from
+        ``make_learner`` (1 = the classic single SGD stream; N > 1 = one
+        replica per replay shard, periodically merged by parameter
+        averaging — actors and checkpoints still see one logical learner).
+    learner_average_period: per-replica SGD steps between parameter-
+        averaging rounds (params, target params, optimizer state, and step
+        counters are all element-wise averaged).
     """
 
     variable_update_period: int = 10
@@ -67,6 +74,8 @@ class BuilderOptions:
     prefetch_size: int = 0
     num_envs_per_actor: int = 1
     inference: str = "local"
+    num_learner_replicas: int = 1
+    learner_average_period: int = 50
 
     def __post_init__(self):
         if self.variable_update_period < 1:
@@ -97,6 +106,14 @@ class BuilderOptions:
             raise ValueError(
                 f"inference must be 'local' or 'server', got "
                 f"{self.inference!r}")
+        if self.num_learner_replicas < 1:
+            raise ValueError(
+                f"num_learner_replicas must be >= 1, got "
+                f"{self.num_learner_replicas}")
+        if self.learner_average_period < 1:
+            raise ValueError(
+                f"learner_average_period must be >= 1, got "
+                f"{self.learner_average_period}")
 
 
 class AgentBuilder(abc.ABC):

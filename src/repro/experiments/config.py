@@ -62,6 +62,17 @@ class ExperimentConfig:
         coalescing — every request dispatches alone).
     inference_max_wait_ms: how long the server holds an open window for
         more requests, measured from the window's first request.
+    num_learner_replicas: learner replicas built from the builder's
+        ``make_learner`` (None = defer to the builder's options).  With
+        N > 1 each replica consumes its own replay shard's dataset
+        (``num_replay_shards`` must be unset or equal to N) and a
+        ``ParameterServer`` periodically averages replica params/opt-state;
+        actors, evaluators, and checkpoints still see ONE logical learner.
+        Setting this explicitly — even to 1 — routes the run through the
+        multi-learner machinery, which is exactly equivalent to the plain
+        single-learner path at N=1 (the parity the test net proves).
+    learner_average_period: per-replica SGD steps between parameter-
+        averaging rounds (None = defer to the builder's options).
     """
 
     builder_factory: BuilderFactory
@@ -81,6 +92,8 @@ class ExperimentConfig:
     inference: Optional[str] = None
     inference_max_batch_size: Optional[int] = None
     inference_max_wait_ms: float = 2.0
+    num_learner_replicas: Optional[int] = None
+    learner_average_period: Optional[int] = None
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -115,6 +128,14 @@ class ExperimentConfig:
         if self.inference_max_wait_ms < 0:
             raise ValueError(f"inference_max_wait_ms must be >= 0, "
                              f"got {self.inference_max_wait_ms}")
+        if self.num_learner_replicas is not None \
+                and self.num_learner_replicas < 1:
+            raise ValueError(f"num_learner_replicas must be >= 1, "
+                             f"got {self.num_learner_replicas}")
+        if self.learner_average_period is not None \
+                and self.learner_average_period < 1:
+            raise ValueError(f"learner_average_period must be >= 1, "
+                             f"got {self.learner_average_period}")
 
 
 @dataclasses.dataclass

@@ -64,7 +64,9 @@ def run_experiment(config: ExperimentConfig,
                 else builder.options.num_envs_per_actor)
     agent = make_agent(builder, seed=config.seed,
                        num_replay_shards=config.num_replay_shards,
-                       num_envs=num_envs)
+                       num_envs=num_envs,
+                       num_learner_replicas=config.num_learner_replicas,
+                       learner_average_period=config.learner_average_period)
     counter = Counter()
     logger = (config.logger_factory("train")
               if config.logger_factory else None)
@@ -132,10 +134,15 @@ def run_experiment(config: ExperimentConfig,
     learner_steps = int(agent.learner.state.steps)
     if checkpointer:
         checkpointer.save(agent.learner.state, learner_steps)
+    extras = {}
+    learner_stats = getattr(agent.learner, "stats", None)
+    if callable(learner_stats):   # MultiLearner: per-replica steps + rounds
+        extras["learners"] = learner_stats()
     return ExperimentResult(
         train_returns=returns, actor_steps=steps, walltime=wall,
         eval_returns=evals, counts=counter.get_counts(),
-        learner_steps=learner_steps, learner=agent.learner, builder=builder)
+        learner_steps=learner_steps, learner=agent.learner, builder=builder,
+        extras=extras)
 
 
 def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
@@ -166,7 +173,11 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   inference_max_batch_size=(
                                       config.inference_max_batch_size),
                                   inference_max_wait_ms=(
-                                      config.inference_max_wait_ms))
+                                      config.inference_max_wait_ms),
+                                  num_learner_replicas=(
+                                      config.num_learner_replicas),
+                                  learner_average_period=(
+                                      config.learner_average_period))
     checkpointer = _make_checkpointer(config)
     t0 = time.time()
     try:
@@ -191,6 +202,9 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
             extras["replay"] = dist.table.stats()
         if dist.inference_server is not None:
             extras["inference"] = dist.inference_server.stats()
+        learner_stats = dist.learner_stats()
+        if learner_stats is not None:   # multi-learner: replica steps/rounds
+            extras["learners"] = learner_stats
         if with_evaluator:
             extras["evaluator_returns"] = dist.evaluator_returns()
     finally:

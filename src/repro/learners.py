@@ -1,0 +1,353 @@
+"""Multi-learner execution: per-shard learner replicas with parameter
+averaging (the distributed-learner half of the §2.4 scaling story).
+
+PR 2 sharded the replay *service*; this module shards the *learner*: N
+replicas, each consuming its own replay shard's dataset, periodically
+merged by a ``ParameterServer`` so actors, evaluators, and checkpoints
+still see ONE logical learner.
+
+Components:
+
+- ``average_states(states)`` — the element-wise pytree mean over replica
+  ``LearnerState``s (params, target params, optimizer moments, step
+  counters).  Float leaves accumulate in float32 and cast back to their
+  dtype; integer leaves (step counters) take an int64 floor mean, exact at
+  any magnitude when replicas agree.  A single-state average is the
+  identity (no float round-trip) — the 1-replica configuration is
+  bit-equivalent to the plain learner.
+- ``ParameterServer`` — the averaging rendezvous.  ``sync(replica_id,
+  state)`` blocks until every replica has contributed the current round,
+  then returns the merged state to all of them (synchronous all-reduce-style
+  parameter averaging).  ``stop()`` releases blocked callers with ``None``
+  so replica teardown can never deadlock on a half-filled round.
+- ``MultiLearner`` — the single-logical-learner facade.  In the
+  single-process path it IS the agent's learner: ``step()`` steps replicas
+  sequentially round-robin and averages in-line every ``average_period``
+  per-replica steps.  In distributed programs the replicas step on their own
+  nodes and the facade only serves ``get_variables`` (last merged params)
+  and ``state`` (the merged checkpoint view; assigning broadcasts a restore
+  to every replica).  Deliberately NOT a ``Learner`` subclass: the ABC's
+  concrete ``run(num_steps)`` would make launchers schedule the facade as a
+  run-loop node.
+- ``LearnerReplicaWorker`` — the program-graph node wrapping one replica:
+  steps SGD until stopped, rendezvous at the parameter server every
+  ``average_period`` steps, closes its prefetching dataset on stop.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The declared RPC surface of the parameter-server node (what a multi-host
+# backend would let remote replicas call).
+PARAM_SERVER_INTERFACE = ("sync", "stats")
+
+
+def average_states(states: Sequence[Any]):
+    """Element-wise mean over a sequence of identically-structured pytrees.
+
+    Float leaves accumulate in float32 and cast back to their dtype;
+    integer leaves (step counters) accumulate in int64 on host and take the
+    floor mean — exact at ANY magnitude when the replicas agree (float32
+    accumulation would silently round counters past 2^24).  With one state
+    this is the identity — no round-trip, so 1-replica averaging is exactly
+    the input state.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("average_states needs at least one state")
+    if len(states) == 1:
+        return states[0]
+
+    def _mean(*leaves):
+        dtype = jnp.asarray(leaves[0]).dtype
+        if jnp.issubdtype(dtype, jnp.integer):
+            total = np.sum([np.asarray(leaf, np.int64) for leaf in leaves],
+                           axis=0)
+            return jnp.asarray((total // len(leaves)).astype(dtype))
+        total = leaves[0].astype(jnp.float32) if hasattr(leaves[0], "astype") \
+            else jnp.asarray(leaves[0], jnp.float32)
+        for leaf in leaves[1:]:
+            total = total + jnp.asarray(leaf, jnp.float32)
+        return (total / len(leaves)).astype(dtype)
+
+    return jax.tree.map(_mean, *states)
+
+
+class ParameterServer:
+    """Synchronous parameter-averaging rendezvous for N learner replicas.
+
+    Each replica calls ``sync(replica_id, state)`` after ``average_period``
+    local SGD steps; the call blocks until all N replicas of the current
+    round have contributed, then every caller receives the same merged
+    state.  ``stop()`` wakes blocked callers with ``None`` (the replica
+    keeps its own state and exits) — a dead or stopping replica can never
+    wedge the others in a half-filled round forever only because fail-fast
+    stop reaches this object like any other node instance.
+    """
+
+    def __init__(self, num_replicas: int, average_period: int):
+        if num_replicas < 1:
+            raise ValueError(
+                f"num_replicas must be >= 1, got {num_replicas}")
+        if average_period < 1:
+            raise ValueError(
+                f"average_period must be >= 1, got {average_period}")
+        self.num_replicas = num_replicas
+        self.average_period = average_period
+        self._cond = threading.Condition()
+        self._pending: Dict[int, Any] = {}
+        self._merged: Any = None
+        self._rounds = 0
+        self._stopped = False
+
+    @property
+    def merged(self):
+        """Last merged state (None before the first completed round)."""
+        with self._cond:
+            return self._merged
+
+    @property
+    def rounds(self) -> int:
+        with self._cond:
+            return self._rounds
+
+    @property
+    def stopped(self) -> bool:
+        with self._cond:
+            return self._stopped
+
+    def merge(self, states: Sequence[Any]):
+        """Average ``states`` and record the result as a completed round
+        (the sequential single-process path, where one thread holds every
+        replica and no barrier is needed)."""
+        merged = average_states(states)
+        with self._cond:
+            self._merged = merged
+            self._rounds += 1
+        return merged
+
+    def sync(self, replica_id: int, state):
+        """Contribute ``state`` for the current round; block until all
+        replicas have contributed; return the merged state (None once
+        stopped)."""
+        if not 0 <= replica_id < self.num_replicas:
+            raise ValueError(
+                f"replica_id must be in [0, {self.num_replicas}), "
+                f"got {replica_id}")
+        with self._cond:
+            if self._stopped:
+                return None
+            round_at_entry = self._rounds
+            self._pending[replica_id] = state
+            if len(self._pending) == self.num_replicas:
+                merged = average_states(
+                    [self._pending[i] for i in sorted(self._pending)])
+                self._pending.clear()
+                self._merged = merged
+                self._rounds += 1
+                self._cond.notify_all()
+                return merged
+            while self._rounds == round_at_entry and not self._stopped:
+                self._cond.wait(0.1)
+            if self._rounds == round_at_entry:   # woken by stop()
+                return None
+            return self._merged
+
+    def stop(self):
+        with self._cond:
+            self._stopped = True
+            self._pending.clear()
+            self._cond.notify_all()
+
+    def stats(self) -> Dict[str, Any]:
+        with self._cond:
+            return {"num_replicas": self.num_replicas,
+                    "average_period": self.average_period,
+                    "rounds": self._rounds}
+
+
+class MultiLearner:
+    """N learner replicas behind the single-learner surface.
+
+    Single-process runs step it directly: ``step()`` advances one replica
+    per call in round-robin order and averages all replicas in-line once
+    every replica has taken ``average_period`` steps since the last merge —
+    the sequential equivalent of the distributed barrier.  Distributed runs
+    never call ``step()``; replica nodes step themselves and rendezvous at
+    the shared ``ParameterServer``, while this facade serves the merged
+    view to actors (``get_variables``) and checkpoints (``state``).
+    """
+
+    def __init__(self, replicas: Sequence[Any], average_period: int = 50,
+                 param_server: Optional[ParameterServer] = None,
+                 workers: Optional[Sequence["LearnerReplicaWorker"]] = None):
+        self._replicas = list(replicas)
+        if not self._replicas:
+            raise ValueError("MultiLearner needs at least one replica")
+        if average_period < 1:
+            raise ValueError(
+                f"average_period must be >= 1, got {average_period}")
+        self._period = average_period
+        self._server = param_server or ParameterServer(
+            len(self._replicas), average_period)
+        self._workers = list(workers) if workers is not None else None
+        self._step_counts = [0] * len(self._replicas)
+        self._cursor = 0
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self._replicas)
+
+    @property
+    def average_period(self) -> int:
+        return self._period
+
+    @property
+    def replicas(self) -> List[Any]:
+        return list(self._replicas)
+
+    @property
+    def param_server(self) -> ParameterServer:
+        return self._server
+
+    @property
+    def next_replica(self) -> int:
+        """Index of the replica the next sequential ``step()`` will
+        advance — what a lockstep scheduler must gate on (the step samples
+        that replica's shard only, not the aggregate table)."""
+        return self._cursor
+
+    # ------------------------------------------------------- learner surface
+    def step(self) -> Dict[str, Any]:
+        """Sequential round-robin: one replica step per call; a full cycle
+        of ``num_replicas * average_period`` calls ends in a merge that
+        every replica adopts."""
+        i = self._cursor
+        metrics = self._replicas[i].step()
+        self._step_counts[i] += 1
+        self._cursor = (i + 1) % len(self._replicas)
+        if self._cursor == 0 \
+                and self._step_counts[-1] % self._period == 0:
+            merged = self._server.merge([r.state for r in self._replicas])
+            for replica in self._replicas:
+                replica.state = merged
+        return metrics
+
+    def get_variables(self, names: Sequence[str] = ("policy",)):
+        """Actors see ONE logical learner: the merged view of the replicas'
+        CURRENT params (each replica swaps its immutable state atomically,
+        so the average is over consistent snapshots).  Only params are
+        averaged here — this is the weight-sync hot path, and the optimizer
+        moments/target params of the full ``state`` view would be computed
+        just to be discarded.  With one replica this is exactly that
+        replica's live params — which is what makes the 1-replica
+        configuration serve bit-identical weights to the plain learner."""
+        params_per_replica = [getattr(r.state, "params", None)
+                              for r in self._replicas]
+        if any(p is None for p in params_per_replica):
+            return self._replicas[0].get_variables(names)
+        params = jax.tree.map(np.asarray, average_states(params_per_replica))
+        return [params for _ in (names or ("policy",))]
+
+    @property
+    def state(self):
+        """The merged checkpoint view: the average of every replica's
+        current state (identity for one replica)."""
+        return average_states([r.state for r in self._replicas])
+
+    @state.setter
+    def state(self, merged):
+        """Restore: broadcast a (checkpointed) merged state to all
+        replicas."""
+        for replica in self._replicas:
+            replica.state = merged
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        """Per-replica executed step counts + averaging rounds — what
+        ``result.extras['learners']`` reports."""
+        if self._workers is not None:
+            per_replica = [w.steps_taken for w in self._workers]
+        else:
+            per_replica = list(self._step_counts)
+        return {"num_replicas": len(self._replicas),
+                "average_period": self._period,
+                "rounds": self._server.rounds,
+                "per_replica_steps": per_replica}
+
+
+class LearnerReplicaWorker:
+    """One learner replica as a program-graph node (a run+serve hybrid like
+    the single-learner node): steps SGD on its own shard's dataset until
+    stopped, rendezvous at the ``ParameterServer`` every ``average_period``
+    steps (``param_server=None`` skips the rendezvous — the plain
+    single-learner node is the degenerate case), and serves
+    ``get_variables`` for debugging/conformance.
+
+    ``dataset`` (a ``PrefetchingDataset`` when prefetch is enabled) is
+    closed on stop and on run-loop exit, so replica teardown cannot leak
+    sampler threads across sequential runs in one process.
+    """
+
+    def __init__(self, learner, param_server=None, replica_id: int = 0,
+                 average_period: int = 1, max_steps: Optional[int] = None,
+                 dataset=None, shard=None):
+        if average_period < 1:
+            raise ValueError(
+                f"average_period must be >= 1, got {average_period}")
+        self.learner = learner
+        self.param_server = param_server
+        self.replica_id = replica_id
+        self.average_period = average_period
+        self.max_steps = max_steps
+        self.dataset = dataset
+        self.shard = shard
+        self.steps_taken = 0
+        self._stop = threading.Event()
+
+    def run(self):
+        local = 0
+        try:
+            for i in itertools.count():
+                if self._stop.is_set():
+                    return
+                if self.max_steps is not None and i >= self.max_steps:
+                    return
+                try:
+                    self.learner.step()
+                except Exception:
+                    if self._stop.is_set():
+                        return
+                    raise
+                self.steps_taken += 1
+                local += 1
+                if self.param_server is not None \
+                        and local >= self.average_period:
+                    local = 0
+                    merged = self.param_server.sync(self.replica_id,
+                                                    self.learner.state)
+                    if merged is None:   # server stopped mid-round
+                        return
+                    self.learner.state = merged
+        finally:
+            self._close_dataset()
+
+    def stop(self):
+        self._stop.set()
+        # wake a step() blocked on the prefetch queue: close() sets the
+        # dataset's stop event, its next() raises the "stopped" timeout,
+        # and the run loop exits through the stop check above.
+        self._close_dataset()
+
+    def get_variables(self, names: Sequence[str] = ()):
+        return self.learner.get_variables(names)
+
+    def _close_dataset(self):
+        if self.dataset is not None and hasattr(self.dataset, "close"):
+            self.dataset.close()

@@ -117,3 +117,20 @@ class PrefetchingDataset:
         self._stop_event.set()
         for t in self._threads:
             t.join(timeout)
+
+    @property
+    def closed(self) -> bool:
+        return self._stop_event.is_set()
+
+    def close(self, timeout: Optional[float] = 2.0):
+        """Stop + drain: join the sampler threads and empty the queue so a
+        stopped learner node releases its buffered batches — sequential
+        runs in one process cannot accumulate leaked prefetch threads or
+        buffered sample memory.  Idempotent; a consumer blocked in
+        ``next()`` is woken with the "stopped" timeout."""
+        self.stop(timeout)
+        while True:
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                return

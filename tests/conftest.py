@@ -1,6 +1,15 @@
-"""Suite-wide guards: a per-test watchdog (dumps all thread stacks and
-aborts if any single test exceeds WATCHDOG_S — learning tests are slow on
-one CPU core, but nothing should exceed this) and small hypothesis budgets.
+"""Suite-wide guards and shared fixtures.
+
+Guards: a per-test watchdog (dumps all thread stacks and aborts if any
+single test exceeds WATCHDOG_S — learning tests are slow on one CPU core,
+but nothing should exceed this) and small hypothesis budgets.
+
+Fixtures: the DQN-on-Catch smoke ``ExperimentConfig`` factory shared by
+``test_builders_api`` / ``test_sharded_replay`` / ``test_vectorized`` /
+``test_distributed`` / ``test_multi_learner`` — previously copy-pasted per
+file.  The factory classes are module-level and picklable BY REFERENCE to
+this module, so the multiprocess backend can ship them into spawn children
+(pytest puts this directory on ``sys.path``; spawn children inherit it).
 
 NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device; the
 dry-run subprocess test sets its own 512-device env.
@@ -17,3 +26,52 @@ def _watchdog():
     faulthandler.dump_traceback_later(WATCHDOG_S, exit=True)
     yield
     faulthandler.cancel_dump_traceback_later()
+
+
+# ------------------------------------------- shared DQN-on-Catch fixtures
+class DQNCatchBuilderFactory:
+    """Picklable ``spec -> DQNBuilder`` factory over Catch-sized smoke
+    presets; keyword knobs override ``DQNConfig`` fields."""
+
+    DEFAULTS = dict(min_replay_size=50, samples_per_insert=4.0,
+                    batch_size=16, n_step=1, epsilon=0.2)
+
+    def __init__(self, seed: int = 0, **cfg_overrides):
+        self.seed = seed
+        self.cfg_kwargs = dict(self.DEFAULTS)
+        self.cfg_kwargs.update(cfg_overrides)
+
+    def __call__(self, spec):
+        from repro.agents.dqn import DQNBuilder, DQNConfig
+        return DQNBuilder(spec, DQNConfig(**self.cfg_kwargs), seed=self.seed)
+
+
+class CatchEnvFactory:
+    """Picklable ``seed -> Catch`` factory."""
+
+    def __call__(self, seed):
+        from repro.envs import Catch
+        return Catch(seed=seed)
+
+
+catch_env_factory = CatchEnvFactory()
+
+
+def make_dqn_catch_config(*, seed: int = 0, builder_seed: int = None,
+                          **knobs):
+    """One DQN-on-Catch smoke ``ExperimentConfig``: ``DQNConfig`` field
+    names go to the builder factory, everything else to the config."""
+    import dataclasses as _dc
+
+    from repro.agents.dqn import DQNConfig
+    from repro.experiments import ExperimentConfig
+
+    cfg_fields = {f.name for f in _dc.fields(DQNConfig)}
+    builder_knobs = {k: v for k, v in knobs.items() if k in cfg_fields}
+    config_knobs = {k: v for k, v in knobs.items() if k not in cfg_fields}
+    return ExperimentConfig(
+        builder_factory=DQNCatchBuilderFactory(
+            seed=seed if builder_seed is None else builder_seed,
+            **builder_knobs),
+        environment_factory=catch_env_factory,
+        seed=seed, **config_knobs)

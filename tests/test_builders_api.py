@@ -210,19 +210,11 @@ def test_builder_requires_options():
 def test_single_vs_distributed_parity():
     """Acceptance: run_distributed_experiment drives the same DQN builder
     unchanged — both execution modes learn from one ExperimentConfig."""
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    from repro.experiments import (ExperimentConfig, run_experiment,
-                                   run_distributed_experiment)
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_experiment, run_distributed_experiment
 
-    def builder_factory(spec):
-        return DQNBuilder(spec, DQNConfig(min_replay_size=30,
-                                          samples_per_insert=4.0,
-                                          batch_size=16, n_step=1,
-                                          epsilon=0.2), seed=0)
-
-    config = ExperimentConfig(builder_factory=builder_factory,
-                              environment_factory=lambda s: Catch(seed=s),
-                              seed=0, num_episodes=40, eval_episodes=10)
+    config = make_dqn_catch_config(seed=0, min_replay_size=30,
+                                   num_episodes=40, eval_episodes=10)
 
     single = run_experiment(config)
     assert single.counts["actor_steps"] > 0

@@ -98,6 +98,45 @@ class Stubborn:
         time.sleep(120)
 
 
+# Fake learners driving LearnerReplicaWorker through the conformance suite
+# (module-level for the multiprocess backend's pickling).
+class TickLearner:
+    """Minimal learner: state is a float scalar; step() bumps it."""
+
+    def __init__(self, value=0.0, step_s=0.0):
+        import jax.numpy as jnp
+        self.state = jnp.asarray(value, jnp.float32)
+        self.step_s = step_s
+
+    def step(self):
+        import jax.numpy as jnp
+        if self.step_s:
+            time.sleep(self.step_s)
+        self.state = self.state + jnp.asarray(1.0, jnp.float32)
+        return {}
+
+    def get_variables(self, names=()):
+        return [float(self.state)]
+
+
+class ExplodingLearner(TickLearner):
+    def __init__(self, blow_at=3):
+        super().__init__()
+        self.blow_at = blow_at
+
+    def step(self):
+        if float(self.state) >= self.blow_at:
+            raise ValueError("replica-boom")
+        return super().step()
+
+
+class SleepyLearner(TickLearner):
+    """step() sleeps long enough to straggle past a short join timeout."""
+
+    def __init__(self):
+        super().__init__(step_s=8.0)
+
+
 def _cleanup(launcher):
     """Best-effort teardown for tests that leave stubborn runners behind."""
     launcher.stop()
@@ -232,6 +271,83 @@ def test_handle_pickling_roundtrip(backend):
     finally:
         launcher.stop()
         launcher.join(timeout=JOIN_S)
+
+
+# ----------------------------------------- learner-replica node conformance
+def _replica_program(learners, average_period=2, max_steps=6):
+    """The multi-learner node shape ``make_distributed_agent`` emits:
+    ``learner/replica_i`` run+serve hybrids around a shared
+    ``learner/param_server`` rendezvous."""
+    from repro.learners import (PARAM_SERVER_INTERFACE, LearnerReplicaWorker,
+                                ParameterServer)
+    prog = Program()
+    server = ParameterServer(len(learners), average_period)
+    prog.add_node("learner/param_server", lambda: server, role="service",
+                  interface=PARAM_SERVER_INTERFACE)
+    handles = []
+    for i, learner in enumerate(learners):
+        worker = LearnerReplicaWorker(learner, server, i, average_period,
+                                      max_steps=max_steps)
+        handles.append(prog.add_node(f"learner/replica_{i}",
+                                     lambda w=worker: w, role="service",
+                                     interface=("get_variables",)))
+    return prog, server, handles
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_learner_replica_nodes_step_and_average(backend):
+    """Replica nodes run as run+serve hybrids on every backend: both step
+    to max_steps, rendezvous at the param server, and serve exactly their
+    declared interface."""
+    prog, server, handles = _replica_program(
+        [TickLearner(0.0), TickLearner(4.0)], average_period=2, max_steps=6)
+    launcher = get_launcher(backend)(prog).launch()
+    try:
+        launcher.join(timeout=JOIN_S)
+    finally:
+        launcher.stop()
+    assert server.rounds == 3          # 6 steps / period 2
+    # averaging pulled the two streams together: both replicas converged to
+    # the shared mean trajectory
+    v0 = prog.resolve("learner/replica_0").get_variables()[0]
+    v1 = prog.resolve("learner/replica_1").get_variables()[0]
+    assert v0 == v1
+    # interface enforcement on the replica handle
+    assert handles[0].get_variables() == [v0]
+    with pytest.raises(AttributeError):
+        handles[0].learner
+    with pytest.raises(AttributeError):
+        handles[0].run
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_learner_replica_death_fails_fast(backend):
+    """One replica dying stops its siblings (the survivor is released from
+    the averaging barrier instead of waiting forever) and join surfaces
+    the error."""
+    prog, server, _ = _replica_program(
+        [ExplodingLearner(blow_at=3), TickLearner(0.0)],
+        average_period=2, max_steps=100)
+    launcher = get_launcher(backend)(prog).launch()
+    with pytest.raises(Exception) as exc_info:
+        launcher.join(timeout=JOIN_S)
+    assert "replica-boom" in str(exc_info.value)
+    assert launcher.should_stop()
+    assert server.stopped
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_join_timeout_names_straggler_replica(backend):
+    """A replica stuck inside a long learner step is named by JoinTimeout."""
+    prog, _, _ = _replica_program([SleepyLearner()], average_period=100,
+                                  max_steps=1)
+    launcher = get_launcher(backend)(prog).launch()
+    time.sleep(0.3)                     # let the replica enter its step
+    launcher.stop()
+    with pytest.raises(JoinTimeout) as exc_info:
+        launcher.join(timeout=0.5)
+    assert "learner/replica_0" in exc_info.value.node_names
+    _cleanup(launcher)
 
 
 def test_unserved_handle_refuses_to_pickle():
@@ -511,29 +627,16 @@ def test_variable_client_period_still_honoured():
 
 
 # --------------------------------------------- multiprocess learning smoke
-def _smoke_builder_factory(spec):
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    return DQNBuilder(spec, DQNConfig(min_replay_size=50,
-                                      samples_per_insert=4.0,
-                                      batch_size=16, n_step=1,
-                                      epsilon=0.2), seed=0)
-
-
-def _smoke_env_factory(seed):
-    from repro.envs import Catch
-    return Catch(seed=seed)
-
-
+@pytest.mark.slow
 def test_multiprocess_dqn_on_catch_learning_smoke():
     """Acceptance: the UNCHANGED DQNBuilder trains on Catch with actors in
     separate OS processes, pulling weights via the courier-served learner
     and feeding replay (sharded, to exercise shard service nodes) over
     courier RPC."""
-    from repro.experiments import ExperimentConfig, run_distributed_experiment
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_distributed_experiment
 
-    config = ExperimentConfig(
-        builder_factory=_smoke_builder_factory,
-        environment_factory=_smoke_env_factory,
+    config = make_dqn_catch_config(
         seed=0, eval_episodes=20, num_replay_shards=2,
         launcher="multiprocess")
     result = run_distributed_experiment(config, num_actors=2,

@@ -1,0 +1,434 @@
+"""Multi-learner training: per-shard learner replicas + parameter averaging.
+
+The credibility net for ``repro.learners``:
+
+- averaging math against a hand-computed pytree mean (params AND optimizer
+  moments AND integer step counters);
+- 1-replica multi-learner vs the plain learner — allclose (in fact equal)
+  params from the same seed on identical sampled batches, both at the
+  learner level and through ``run_experiment``;
+- 2-replica DQN-on-Catch learns (mean eval return clears the random-policy
+  floor) under both the ``local`` and ``multiprocess`` launchers — the
+  acceptance criterion, driven through the UNCHANGED ``DQNBuilder``;
+- program-graph placement: ``learner/replica_i`` nodes with shard affinity,
+  the ``learner/param_server`` rendezvous, and the unchanged ``learner``
+  variable endpoint;
+- checkpoint round-trip of the merged state.
+
+Factories come from ``conftest`` so the multiprocess backend can pickle
+them into spawn children.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import make_dqn_catch_config
+from repro.core import make_environment_spec
+from repro.envs import Catch
+from repro.learners import (LearnerReplicaWorker, MultiLearner,
+                            ParameterServer, average_states)
+from repro.replay.dataset import ReplaySample, SampleInfo
+
+CATCH_FLOOR = -0.6   # random policy mean return on Catch is ~-1..-0.6
+
+
+# ----------------------------------------------------------------- helpers
+def _catch_spec():
+    return make_environment_spec(Catch(seed=0))
+
+
+def _dqn_builder(seed=0, **overrides):
+    from repro.agents.dqn import DQNBuilder, DQNConfig
+    kwargs = dict(min_replay_size=8, samples_per_insert=0.0, batch_size=8,
+                  n_step=1, prioritized=False)
+    kwargs.update(overrides)
+    return DQNBuilder(_catch_spec(), DQNConfig(**kwargs), seed=seed)
+
+
+def _synthetic_batches(num_batches, batch_size=8, seed=0):
+    """Deterministic DQN-shaped ReplaySample batches (Catch observations)."""
+    from repro.core.types import Transition
+    rng = np.random.RandomState(seed)
+    batches = []
+    for b in range(num_batches):
+        obs = rng.rand(batch_size, 10, 5).astype(np.float32)
+        next_obs = rng.rand(batch_size, 10, 5).astype(np.float32)
+        data = Transition(
+            observation=obs,
+            action=rng.randint(0, 3, size=batch_size).astype(np.int32),
+            reward=rng.randn(batch_size).astype(np.float32),
+            discount=np.ones(batch_size, np.float32),
+            next_observation=next_obs)
+        info = SampleInfo(np.arange(batch_size, dtype=np.int64),
+                          np.full(batch_size, 1.0 / 64))
+        batches.append(ReplaySample(info, data))
+    return batches
+
+
+def _tree_allclose(a, b, **kw):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+# ----------------------------------------------------- averaging math unit
+def test_average_states_matches_hand_computed_pytree_mean():
+    """Params, optimizer moments, and integer step counters are all
+    element-wise averaged; dtypes are preserved."""
+    s1 = {"params": {"w": jnp.array([1.0, 3.0]), "b": jnp.array(2.0)},
+          "opt": {"mu": jnp.array([0.5, 0.5]), "nu": jnp.array([4.0, 0.0])},
+          "steps": jnp.array(10, jnp.int32)}
+    s2 = {"params": {"w": jnp.array([3.0, 5.0]), "b": jnp.array(6.0)},
+          "opt": {"mu": jnp.array([1.5, 0.5]), "nu": jnp.array([0.0, 2.0])},
+          "steps": jnp.array(10, jnp.int32)}
+    merged = average_states([s1, s2])
+    np.testing.assert_allclose(merged["params"]["w"], [2.0, 4.0])
+    np.testing.assert_allclose(merged["params"]["b"], 4.0)
+    np.testing.assert_allclose(merged["opt"]["mu"], [1.0, 0.5])
+    np.testing.assert_allclose(merged["opt"]["nu"], [2.0, 1.0])
+    assert merged["steps"] == 10
+    assert merged["steps"].dtype == jnp.int32
+    assert merged["params"]["w"].dtype == jnp.float32
+
+
+def test_average_states_integer_counters_exact_past_float32_precision():
+    """Step counters average in int64, not float32: equal counters above
+    2^24 (where float32 rounds odd integers) must merge exactly — a long
+    run's step counter cannot silently decrement at an averaging round."""
+    big = 2 ** 24 + 1
+    s1 = {"steps": jnp.array(big, jnp.int32)}
+    s2 = {"steps": jnp.array(big, jnp.int32)}
+    merged = average_states([s1, s2])
+    assert int(merged["steps"]) == big
+    assert merged["steps"].dtype == jnp.int32
+
+
+def test_average_states_single_state_is_identity():
+    """One replica: no float round-trip — the exact same pytree comes back
+    (what makes the 1-replica configuration bit-equivalent)."""
+    state = {"w": jnp.array([1.0, 2.0]), "steps": jnp.array(7, jnp.int32)}
+    assert average_states([state]) is state
+
+
+def test_average_states_on_real_learner_state_includes_opt_state():
+    """The averaged LearnerState of two diverged DQN learners equals the
+    hand-computed per-leaf mean, optimizer moments included."""
+    batches = _synthetic_batches(4)
+    l1 = _dqn_builder(seed=0).make_learner(iter(batches))
+    l2 = _dqn_builder(seed=0).make_learner(iter(reversed(batches)))
+    for _ in range(4):
+        l1.step()
+        l2.step()
+    merged = average_states([l1.state, l2.state])
+    hand = jax.tree.map(
+        lambda a, b: ((np.asarray(a, np.float32) + np.asarray(b, np.float32))
+                      / 2.0).astype(np.asarray(a).dtype),
+        l1.state, l2.state)
+    _tree_allclose(merged, hand, rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------- parameter server
+def test_parameter_server_barrier_merges_and_counts_rounds():
+    import threading
+    server = ParameterServer(num_replicas=2, average_period=5)
+    results = {}
+
+    def contribute(rid, value):
+        results[rid] = server.sync(rid, {"w": jnp.array(value)})
+
+    t = threading.Thread(target=contribute, args=(0, 1.0))
+    t.start()
+    contribute(1, 3.0)
+    t.join(5)
+    assert not t.is_alive()
+    np.testing.assert_allclose(results[0]["w"], 2.0)
+    np.testing.assert_allclose(results[1]["w"], 2.0)
+    assert server.rounds == 1
+    assert server.stats() == {"num_replicas": 2, "average_period": 5,
+                              "rounds": 1}
+
+
+def test_parameter_server_stop_releases_blocked_sync():
+    """A half-filled round must never wedge teardown: stop() wakes the
+    blocked replica with None (it keeps its own state and exits)."""
+    import threading
+    server = ParameterServer(num_replicas=2, average_period=5)
+    out = {}
+
+    def blocked():
+        out["result"] = server.sync(0, {"w": jnp.array(1.0)})
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    import time
+    time.sleep(0.2)
+    assert t.is_alive()
+    server.stop()
+    t.join(5)
+    assert not t.is_alive()
+    assert out["result"] is None
+    assert server.rounds == 0
+
+
+def test_parameter_server_rejects_bad_args():
+    with pytest.raises(ValueError):
+        ParameterServer(num_replicas=0, average_period=5)
+    with pytest.raises(ValueError):
+        ParameterServer(num_replicas=2, average_period=0)
+    server = ParameterServer(num_replicas=2, average_period=5)
+    with pytest.raises(ValueError):
+        server.sync(2, {})
+
+
+# ------------------------------------------------------------- parity net
+def test_one_replica_multi_learner_matches_plain_learner():
+    """The heart of the parity net: on IDENTICAL sampled batches from the
+    same seed, a 1-replica MultiLearner and the plain learner produce
+    allclose (equal) params, target params, and optimizer state."""
+    batches = _synthetic_batches(12)
+    plain = _dqn_builder(seed=3).make_learner(iter(list(batches)))
+    multi = MultiLearner([_dqn_builder(seed=3).make_learner(
+        iter(list(batches)))], average_period=4)
+    for _ in range(12):
+        plain.step()
+        multi.step()
+    _tree_allclose(multi.state.params, plain.state.params)
+    _tree_allclose(multi.state.target_params, plain.state.target_params)
+    _tree_allclose(multi.state.opt_state, plain.state.opt_state)
+    assert int(multi.state.steps) == int(plain.state.steps) == 12
+    # the served variables match too (one logical learner)
+    _tree_allclose(multi.get_variables(("policy",))[0],
+                   plain.get_variables(("policy",))[0])
+
+
+def test_run_experiment_one_replica_parity_with_single_learner_path():
+    """num_learner_replicas=1 routes through the multi-learner machinery
+    and lands on exactly the same params as the default path — same seed,
+    same env stream, same sampled batches."""
+    from repro.experiments import run_experiment
+
+    base = make_dqn_catch_config(
+        seed=0, min_replay_size=16, samples_per_insert=0.0, batch_size=16,
+        prioritized=False, num_episodes=15, eval_episodes=0)
+    plain = run_experiment(base)
+    multi = run_experiment(dataclasses.replace(
+        base, num_learner_replicas=1, learner_average_period=7))
+    assert plain.learner_steps == multi.learner_steps > 0
+    _tree_allclose(multi.learner.state.params, plain.learner.state.params)
+    _tree_allclose(multi.learner.state.opt_state,
+                   plain.learner.state.opt_state)
+    assert multi.extras["learners"]["num_replicas"] == 1
+    assert multi.extras["learners"]["per_replica_steps"] == \
+        [multi.learner_steps]
+    assert "learners" not in plain.extras
+
+
+def test_sequential_round_robin_averages_every_period():
+    """2 replicas, period 3: after 6 facade steps (one full cycle of
+    3-per-replica) every replica holds the merged state; counts and rounds
+    are reported in stats()."""
+    batches_a = _synthetic_batches(9, seed=1)
+    batches_b = _synthetic_batches(9, seed=2)
+    multi = MultiLearner(
+        [_dqn_builder(seed=0).make_learner(iter(batches_a)),
+         _dqn_builder(seed=0).make_learner(iter(batches_b))],
+        average_period=3)
+    for _ in range(5):
+        multi.step()
+    assert multi.param_server.rounds == 0     # mid-cycle: no merge yet
+    multi.step()                              # completes 3 steps per replica
+    assert multi.param_server.rounds == 1
+    r0, r1 = multi.replicas
+    _tree_allclose(r0.state.params, r1.state.params)
+    stats = multi.stats()
+    assert stats == {"num_replicas": 2, "average_period": 3, "rounds": 1,
+                     "per_replica_steps": [3, 3]}
+
+
+# ------------------------------------------------------ program placement
+def test_make_distributed_agent_places_replica_nodes_with_shard_affinity():
+    from repro.agents.builders import make_distributed_agent
+    from conftest import DQNCatchBuilderFactory, catch_env_factory
+
+    builder = DQNCatchBuilderFactory(samples_per_insert=0.0)(_catch_spec())
+    dist = make_distributed_agent(builder, catch_env_factory, num_actors=1,
+                                  seed=0, num_learner_replicas=2,
+                                  learner_average_period=10,
+                                  prefetch_size=2)
+    try:
+        names = {n.name for n in dist.program.nodes}
+        assert {"learner", "learner/param_server", "learner/replica_0",
+                "learner/replica_1", "replay/shard_0",
+                "replay/shard_1"} <= names
+        assert isinstance(dist.learner, MultiLearner)
+        # shard affinity: replica i consumes exactly replay/shard_i
+        for i in range(2):
+            worker = dist.program.resolve(f"learner/replica_{i}")
+            assert worker.shard is dist.table.shards[i]
+        # the learner endpoint's declared interface is unchanged
+        assert dist.program.node("learner").interface == ("get_variables",)
+    finally:
+        dist.stop()
+    # replica teardown closed the per-replica prefetching datasets
+    assert all(d.closed for d in dist.datasets)
+
+
+def test_mismatched_shards_and_replicas_rejected():
+    from repro.agents.builders import make_agent
+    from conftest import DQNCatchBuilderFactory
+
+    builder = DQNCatchBuilderFactory()(_catch_spec())
+    with pytest.raises(ValueError, match="shard affinity"):
+        make_agent(builder, num_learner_replicas=2, num_replay_shards=3)
+
+
+def test_offline_builder_rejects_explicit_replicas():
+    """An offline builder asked for replicas must fail loudly, not silently
+    downgrade to one plain learner."""
+    from repro.agents.bc import BCBuilder, BCConfig
+    from repro.agents.builders import make_agent
+    from repro.core.types import Transition
+
+    items = [Transition(np.zeros((10, 5), np.float32), np.int32(i % 3),
+                        np.float32(0.0), np.float32(1.0),
+                        np.zeros((10, 5), np.float32)) for i in range(8)]
+    builder = BCBuilder(_catch_spec(), items, BCConfig(batch_size=4), seed=0)
+    with pytest.raises(ValueError, match="offline"):
+        make_agent(builder, num_learner_replicas=2)
+
+
+def test_consuming_queue_builder_runs_multi_learner_without_hanging():
+    """IMPALA's replay is a consuming Fifo queue: the lockstep schedule
+    must gate each sequential replica step on THAT replica's shard (the
+    aggregate view can hold a batch the cursor's shard cannot serve, which
+    would hang the loop inside a blocking sample)."""
+    from repro.agents.impala import IMPALABuilder, IMPALAConfig
+    from repro.experiments import ExperimentConfig, run_experiment
+
+    config = ExperimentConfig(
+        builder_factory=lambda spec: IMPALABuilder(
+            spec, IMPALAConfig(sequence_length=3, batch_size=2), seed=0),
+        environment_factory=lambda s: Catch(seed=s),
+        seed=0, num_episodes=12, eval_episodes=0,
+        num_learner_replicas=2, learner_average_period=2)
+    result = run_experiment(config)
+    assert result.learner_steps > 0
+    assert result.extras["learners"]["num_replicas"] == 2
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_of_merged_state(tmp_path):
+    """Checkpointing sees ONE logical learner: the saved state is the
+    merged view, and restoring broadcasts it to every replica."""
+    from repro.checkpoint import Checkpointer
+
+    multi = MultiLearner(
+        [_dqn_builder(seed=0).make_learner(iter(_synthetic_batches(4, seed=1))),
+         _dqn_builder(seed=0).make_learner(iter(_synthetic_batches(4, seed=2)))],
+        average_period=100)   # no merge before the save: replicas diverged
+    for _ in range(8):
+        multi.step()
+    merged = multi.state
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(merged, 4)
+
+    fresh = MultiLearner(
+        [_dqn_builder(seed=9).make_learner(iter(_synthetic_batches(1))),
+         _dqn_builder(seed=9).make_learner(iter(_synthetic_batches(1)))],
+        average_period=100)
+    restored, meta = ckpt.restore(fresh.state)
+    assert meta["step"] == 4
+    fresh.state = restored
+    for replica in fresh.replicas:
+        _tree_allclose(replica.state.params, merged.params,
+                       rtol=1e-6, atol=1e-7)
+        _tree_allclose(replica.state.opt_state, merged.opt_state,
+                       rtol=1e-6, atol=1e-7)
+
+
+# ----------------------------------------------------- prefetch teardown
+def test_prefetching_dataset_close_joins_threads_and_drains():
+    """close() = stop + join + drain: no sampler thread survives, no batch
+    stays buffered — what replica teardown relies on to avoid leaking
+    threads across sequential runs in one process."""
+    import threading
+
+    from repro.replay import MinSize, PrefetchingDataset, Table, Uniform
+
+    table = Table("t", 100, Uniform(0), MinSize(1))
+    for i in range(32):
+        table.insert(np.full(3, i, np.float32))
+    dataset = PrefetchingDataset(table, batch_size=4, prefetch_size=4,
+                                 num_threads=2)
+    next(dataset)
+    assert not dataset.closed
+    dataset.close()
+    assert dataset.closed
+    assert dataset.qsize() == 0
+    assert all(not t.is_alive() for t in dataset._threads)
+    dataset.close()   # idempotent
+    table.stop()
+
+
+def test_sequential_distributed_runs_do_not_accumulate_prefetch_threads():
+    """Two back-to-back multi-learner runs with prefetching leave no
+    sampler threads behind (the leak the explicit close() exists to stop)."""
+    import threading
+
+    from repro.experiments import run_distributed_experiment
+
+    def live_prefetch_threads():
+        return [t for t in threading.enumerate()
+                if t.name.startswith("prefetch_") and t.is_alive()]
+
+    config = make_dqn_catch_config(
+        seed=0, samples_per_insert=0.0, eval_episodes=0,
+        num_learner_replicas=2, learner_average_period=5, prefetch_size=2)
+    for _ in range(2):
+        result = run_distributed_experiment(config, num_actors=1,
+                                            max_actor_steps=150,
+                                            timeout_s=60)
+        assert result.learner_steps >= 0
+    import time
+    deadline = time.time() + 5
+    while live_prefetch_threads() and time.time() < deadline:
+        time.sleep(0.1)
+    assert not live_prefetch_threads()
+
+
+# --------------------------------------------------- learning acceptance
+@pytest.mark.parametrize("launcher", [
+    "local",
+    pytest.param("multiprocess", marks=pytest.mark.slow),
+])
+def test_two_replica_dqn_on_catch_learns(launcher):
+    """Acceptance: run_distributed_experiment(num_learner_replicas=2)
+    trains DQN-on-Catch through the UNCHANGED DQNBuilder on both backends —
+    two replica SGD streams with parameter averaging clear the eval bar,
+    and extras['learners'] reports per-replica steps + averaging rounds."""
+    from repro.experiments import run_distributed_experiment
+
+    config = make_dqn_catch_config(
+        seed=0, eval_episodes=20, launcher=launcher,
+        num_learner_replicas=2, learner_average_period=10)
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=4000,
+                                        timeout_s=240)
+    assert result.counts.get("actor_steps", 0) >= 4000
+    assert result.learner_steps > 50
+    learners = result.extras["learners"]
+    assert learners["num_replicas"] == 2
+    assert learners["rounds"] >= 1
+    assert all(s > 0 for s in learners["per_replica_steps"])
+    # both shards fed their replica
+    per_shard = result.extras["replay"]["per_shard"]
+    assert len(per_shard) == 2
+    assert all(s["samples"] > 0 for s in per_shard)
+    # learning: greedy eval beats the random-policy floor on Catch
+    assert result.final_eval_return is not None
+    assert result.final_eval_return > CATCH_FLOOR

@@ -422,18 +422,12 @@ def test_distributed_conformance_with_four_shards(cls):
 def test_sharded_vs_single_learning_equivalence_one_config():
     """One ExperimentConfig, two replay topologies: 1 shard vs 4 shards both
     drive the same DQN builder to a learning run with finite evals."""
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    from repro.experiments import ExperimentConfig, run_experiment
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_experiment
 
-    def builder_factory(spec):
-        return DQNBuilder(spec, DQNConfig(min_replay_size=16,
-                                          samples_per_insert=0.0,
-                                          batch_size=16, n_step=1,
-                                          epsilon=0.2), seed=0)
-
-    config = ExperimentConfig(builder_factory=builder_factory,
-                              environment_factory=lambda s: Catch(seed=s),
-                              seed=0, num_episodes=30, eval_episodes=5)
+    config = make_dqn_catch_config(seed=0, min_replay_size=16,
+                                   samples_per_insert=0.0,
+                                   num_episodes=30, eval_episodes=5)
 
     single = run_experiment(config)
     sharded = run_experiment(
@@ -450,16 +444,13 @@ def test_sharded_vs_single_learning_equivalence_one_config():
 def test_run_distributed_experiment_sharded_extras():
     """run_distributed_experiment(num_replay_shards=4) reports aggregated
     and per-shard replay stats, with the SPI invariant held per shard."""
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    from repro.experiments import ExperimentConfig, run_distributed_experiment
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_distributed_experiment
 
     spi, min_size = 4.0, 8
-    config = ExperimentConfig(
-        builder_factory=lambda spec: DQNBuilder(
-            spec, DQNConfig(min_replay_size=min_size, samples_per_insert=spi,
-                            batch_size=16, n_step=1, epsilon=0.2), seed=0),
-        environment_factory=lambda s: Catch(seed=s),
-        seed=0, eval_episodes=2, num_replay_shards=4, prefetch_size=4)
+    config = make_dqn_catch_config(
+        seed=0, min_replay_size=min_size, samples_per_insert=spi,
+        eval_episodes=2, num_replay_shards=4, prefetch_size=4)
     result = run_distributed_experiment(config, num_actors=2,
                                         max_actor_steps=400, timeout_s=60)
     assert result.learner_steps > 0

@@ -29,25 +29,13 @@ class _ParamSource:
         return [{"w": np.float32(1.0)}]
 
 
-def _dqn_builder(spec, **overrides):
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    kwargs = dict(min_replay_size=50, samples_per_insert=0.0,
-                  batch_size=32, n_step=1, epsilon=0.2)
-    kwargs.update(overrides)
-    return DQNBuilder(spec, DQNConfig(**kwargs), seed=0)
+# Shared DQN-on-Catch smoke factories (conftest): picklable, so the
+# multiprocess backend can ship them into actor children.
+from conftest import DQNCatchBuilderFactory  # noqa: E402
+from conftest import catch_env_factory as _mp_env_factory  # noqa: E402
 
-
-# module-level: the multiprocess backend pickles these into actor children
-def _mp_builder_factory(spec):
-    from repro.agents.dqn import DQNBuilder, DQNConfig
-    return DQNBuilder(spec, DQNConfig(min_replay_size=50,
-                                      samples_per_insert=4.0,
-                                      batch_size=16, n_step=1,
-                                      epsilon=0.2), seed=0)
-
-
-def _mp_env_factory(seed):
-    return Catch(seed=seed)
+_dqn_builder = DQNCatchBuilderFactory(samples_per_insert=0.0, batch_size=32)
+_mp_builder_factory = DQNCatchBuilderFactory()
 
 
 # ---------------------------------------------------------------- VectorEnv
@@ -246,7 +234,8 @@ def test_batched_actor_rng_decorrelates_envs():
     """Per-env device keys: envs given identical observations must not all
     pick identical (exploring) actions."""
     spec = make_environment_spec(Catch(seed=0))
-    builder = _dqn_builder(spec, epsilon=1.0)   # pure exploration
+    builder = DQNCatchBuilderFactory(samples_per_insert=0.0, batch_size=32,
+                                     epsilon=1.0)(spec)   # pure exploration
     learner = builder.make_learner(iter([]))
     actor = builder.make_batched_actor(
         builder.make_policy(evaluation=False),
@@ -473,6 +462,7 @@ def test_vectorized_dqn_learning_statistically_equivalent():
     assert evals[4] > 0.0, evals
 
 
+@pytest.mark.slow
 def test_server_inference_trains_dqn_multiprocess():
     """Acceptance: inference='server' trains DQN-on-Catch under the
     multiprocess launcher — actors in child processes RPC one parent-side
