@@ -1,0 +1,221 @@
+"""Fig 17: transformer policy serving — batched prefill, decode kernel,
+and inference placement once the policy is a transformer.
+
+Three claims behind ``repro.policies``:
+
+1. **Batched prefill** (tier 1): pushing a whole prompt window through the
+   KV cache in ONE jitted call (``make_batched_prefill_step``) beats the
+   token-at-a-time ``serve_step`` replay loop the server previously used.
+   Acceptance: >= 4x prefill tokens/sec on the reduced serve arch.
+
+2. **Decode kernel parity shapes** (report only): ``decode_attention``
+   kernel vs the ``kernels/ref.py`` oracle at the exact shapes the policy
+   serve step emits (power-of-two padded slot batches over window-length
+   ring caches).  On CPU the kernel runs in interpret mode — orders of
+   magnitude slower, which is exactly why ``backend="auto"`` resolves to
+   "ref" off-TPU; the rows document both sides of that fallback rule.
+
+3. **Inference placement** (tier 2, SEED-style): multiprocess actors with
+   ``inference="server"`` — windows over RPC into ONE continuous-batching
+   engine with per-episode cache slots — vs per-actor LOCAL engines, swept
+   over policy ``d_model``.  Small policies win locally (the RPC hop costs
+   more than the forward pass); acceptance is that the server wins at the
+   largest benchmarked policy.
+
+    python benchmarks/fig17_transformer_serving.py            # full sweep
+    python benchmarks/fig17_transformer_serving.py --smoke    # CI mechanics
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.configs import get_arch, reduced
+from repro.experiments import ExperimentConfig, run_distributed_experiment
+from repro.kernels import ops, ref
+from repro.launch.serve import BatchedServer
+
+PREFILL_SLOTS = 8
+PREFILL_LEN = 32
+PREFILL_ITERS = 20
+SMOKE_PREFILL_ITERS = 2
+
+DECODE_SHAPES = ((8, 2, 8, 16), (8, 4, 16, 32))   # (slots, heads, window, d)
+DECODE_ITERS = 50
+
+D_MODELS = (64, 256)
+SMOKE_D_MODELS = (32,)
+SERVER_ACTORS = 4
+SERVER_TARGET_STEPS = 3000
+SMOKE_SERVER_TARGET_STEPS = 200
+TIMEOUT_S = 300.0
+
+
+# Module-level factories: the multiprocess backend pickles them into
+# spawned actor processes (by reference to this module plus instance state).
+class PolicyBuilderFactory:
+    """Picklable ``spec -> TransformerPolicyBuilder`` at one ``d_model``."""
+
+    def __init__(self, d_model: int):
+        self.d_model = d_model
+
+    def __call__(self, spec):
+        from repro.policies import (TransformerPolicyBuilder,
+                                    TransformerPolicyConfig)
+        d = self.d_model
+        # samples_per_insert=0 -> MinSize limiter: actors run unthrottled,
+        # so the figure measures serving throughput, not the SPI schedule.
+        cfg = TransformerPolicyConfig(
+            num_layers=2, d_model=d, num_heads=4, num_kv_heads=2,
+            head_dim=max(d // 4, 8), d_ff=2 * d, window=8,
+            sequence_length=16, period=8, batch_size=16,
+            min_replay_size=100, samples_per_insert=0.0, backend="auto")
+        return TransformerPolicyBuilder(spec, cfg, seed=0)
+
+
+def env_factory(seed):
+    from repro.envs import Catch
+    return Catch(seed=seed)
+
+
+# ------------------------------------------------- tier 1: batched prefill
+def run_prefill(batched: bool, iters: int) -> float:
+    """Prefill tokens/sec through a fresh ``BatchedServer`` cache."""
+    cfg = reduced(get_arch("qwen3-1.7b"))
+    server = BatchedServer(cfg, PREFILL_SLOTS, PREFILL_LEN,
+                           batched_prefill=batched)
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab_size,
+                          (PREFILL_SLOTS, PREFILL_LEN)).astype(np.int32)
+    fresh_cache = server.cache
+    np.asarray(server.prefill(prompts))     # compile outside the window
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        server.cache = fresh_cache
+        np.asarray(server.prefill(prompts))
+    wall = time.perf_counter() - t0
+    return iters * PREFILL_SLOTS * PREFILL_LEN / wall
+
+
+# ------------------------------------- report: decode kernel vs ref oracle
+def run_decode_shapes(iters: int):
+    """Tokens/sec for kernel (interpret off-TPU) vs ref at serve shapes."""
+    rng = np.random.RandomState(1)
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for b, h, s, d in DECODE_SHAPES:
+        q = jnp.asarray(rng.randn(b, h, d), jnp.float32)
+        k = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+        v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+        lengths = jnp.asarray(rng.randint(1, s + 1, b), jnp.int32)
+
+        def timed(fn, n):
+            np.asarray(fn(q, k, v, lengths))      # warm / compile
+            t0 = time.perf_counter()
+            for _ in range(n):
+                np.asarray(fn(q, k, v, lengths))
+            return n * b / (time.perf_counter() - t0)
+
+        ref_fn = jax.jit(ref.decode_attention_ref)
+        ref_tps = timed(ref_fn, iters)
+        # interpret mode is a functional check, not a perf mode — one call.
+        kernel_fn = lambda *a: ops.decode_attention(
+            *a, block_k=min(512, s), interpret=not on_tpu)
+        kernel_tps = timed(kernel_fn, 1 if not on_tpu else iters)
+        rows.append((b, h, s, d, ref_tps, kernel_tps))
+        tag = f"b{b}h{h}s{s}d{d}"
+        csv_row(f"fig17/decode/{tag}/ref_rows_per_sec", round(ref_tps, 1))
+        csv_row(f"fig17/decode/{tag}/kernel_rows_per_sec",
+                round(kernel_tps, 1),
+                "interpret mode (CPU) — why auto->ref off-TPU"
+                if not on_tpu else "pallas kernel")
+    return rows
+
+
+# --------------------------------------------- tier 2: inference placement
+def run_placement(mode: str, d_model: int, num_actors: int,
+                  target_steps: int):
+    config = ExperimentConfig(
+        builder_factory=PolicyBuilderFactory(d_model),
+        environment_factory=env_factory,
+        seed=0, eval_episodes=0, launcher="multiprocess", inference=mode)
+    result = run_distributed_experiment(
+        config, num_actors=num_actors, max_actor_steps=target_steps,
+        timeout_s=TIMEOUT_S)
+    steps = int(result.counts.get("actor_steps", 0))
+    wall = result.extras["walltime"]
+    return {"steps": steps, "wall": wall,
+            "steps_per_sec": steps / max(wall, 1e-9),
+            "inference": result.extras.get("inference")}
+
+
+def main(smoke: bool = False):
+    # -- tier 1: batched vs token-at-a-time prefill
+    iters = SMOKE_PREFILL_ITERS if smoke else PREFILL_ITERS
+    token_tps = run_prefill(batched=False, iters=iters)
+    batch_tps = run_prefill(batched=True, iters=iters)
+    ratio = batch_tps / max(token_tps, 1e-9)
+    csv_row("fig17/prefill/token_at_a_time/tokens_per_sec",
+            round(token_tps, 1))
+    csv_row("fig17/prefill/batched/tokens_per_sec", round(batch_tps, 1))
+    csv_row("fig17/prefill/batched_vs_token", round(ratio, 2),
+            "one jitted call vs serve_step replay loop")
+    if smoke:
+        assert token_tps > 0 and batch_tps > 0, "prefill produced no tokens"
+    else:
+        assert ratio >= 4.0, (
+            f"batched prefill only {ratio:.2f}x token-at-a-time")
+
+    # -- report: decode kernel vs ref at policy serve shapes
+    run_decode_shapes(2 if smoke else DECODE_ITERS)
+
+    # -- tier 2: server vs local placement over policy size
+    d_models = SMOKE_D_MODELS if smoke else D_MODELS
+    num_actors = 2 if smoke else SERVER_ACTORS
+    target = SMOKE_SERVER_TARGET_STEPS if smoke else SERVER_TARGET_STEPS
+    placements = {}
+    for d in d_models:
+        for mode in ("local", "server"):
+            r = run_placement(mode, d, num_actors, target)
+            placements[(d, mode)] = r
+            csv_row(f"fig17/{mode}/d{d}/steps_per_sec",
+                    round(r["steps_per_sec"], 1))
+            if smoke:
+                assert r["steps"] > 0, (
+                    f"{mode} inference at d_model={d} produced no steps")
+        server = placements[(d, "server")]
+        if server["inference"] is not None:
+            stats = server["inference"]
+            csv_row(f"fig17/server/d{d}/avg_rows_per_batch",
+                    round(stats.get("avg_rows_per_batch", 0.0), 2))
+            csv_row(f"fig17/server/d{d}/decode_rows",
+                    stats.get("decode_rows", 0),
+                    "incremental KV-cache decode on the hot path")
+            csv_row(f"fig17/server/d{d}/prefill_rows",
+                    stats.get("prefill_rows", 0),
+                    "episode starts + stale-cache re-prefills")
+            assert stats.get("decode_rows", 0) > 0, (
+                "server answered every row by prefill — the KV cache "
+                "slots are not being continued")
+    if not smoke:
+        top = d_models[-1]
+        gain = (placements[(top, "server")]["steps_per_sec"]
+                / max(placements[(top, "local")]["steps_per_sec"], 1e-9))
+        csv_row(f"fig17/acceptance/server_vs_local_d{top}", round(gain, 2),
+                "centralized inference pays once the policy outgrows "
+                "the RPC hop")
+        assert gain > 1.0, (
+            f"server ({placements[(top, 'server')]['steps_per_sec']:.1f} "
+            f"steps/s) did not beat local "
+            f"({placements[(top, 'local')]['steps_per_sec']:.1f} steps/s) "
+            f"at d_model={top}")
+    return placements
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import make_batched_prefill_step, make_serve_step
 from repro.models import transformer
 
 
@@ -37,10 +37,15 @@ def main():
     serve = jax.jit(make_serve_step(cfg))
 
     prompt = jax.random.randint(rng, (b, args.prompt_len), 0, cfg.vocab_size)
-    # prefill by stepping the decoder over the prompt (teacher forcing)
-    for t in range(args.prompt_len):
-        tok, logits, cache = serve(params, cache, prompt[:, t:t + 1],
-                                   jnp.int32(t))
+    if cfg.arch_type in ("dense", "moe"):
+        # whole-prompt prefill through the cache in one jitted call
+        prefill = jax.jit(make_batched_prefill_step(cfg))
+        tok, logits, cache = prefill(params, cache, prompt)
+    else:
+        # ssm/hybrid/audio caches: step the decoder over the prompt
+        for t in range(args.prompt_len):
+            tok, logits, cache = serve(params, cache, prompt[:, t:t + 1],
+                                       jnp.int32(t))
     # decode
     t0 = time.time()
     out = [tok]

@@ -51,6 +51,10 @@ echo "[ci] smoke: multi-learner replica scaling (fig16 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig16_learner_scaling.py --smoke
 
+echo "[ci] smoke: transformer policy serving (fig17 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig17_transformer_serving.py --smoke
+
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__
 python scripts/smoke_multiprocess.py

@@ -18,8 +18,7 @@ from typing import List, Optional
 
 from repro.builders import AgentBuilder
 from repro.core import (Agent, Counter, EnvironmentLoop,
-                        INFERENCE_INTERFACE, InferenceClientActor,
-                        InferenceServer, VariableClient,
+                        INFERENCE_INTERFACE, InferenceServer, VariableClient,
                         VectorizedEnvironmentLoop)
 from repro.core.inference import policy_is_feed_forward
 from repro.distributed.launchers import JoinTimeout, get_launcher
@@ -232,10 +231,9 @@ class _ActorWorker:
         if inference is not None:
             if num_envs > 1:
                 adders = [builder.make_adder(table) for _ in range(num_envs)]
-                actor = InferenceClientActor(inference, adders=adders,
-                                             batched=True)
+                actor = builder.make_inference_actor(inference, adders=adders)
             else:
-                actor = InferenceClientActor(
+                actor = builder.make_inference_actor(
                     inference, adder=builder.make_adder(table))
         else:
             client = VariableClient(variable_source, update_period=1)
@@ -460,23 +458,6 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
 
     inference_server = None
     if inference_mode == "server":
-        policy = builder.make_policy(evaluation=False)
-        # Server inference supports exactly the builders that use the
-        # DEFAULT feed-forward batched actor: an override means the agent
-        # needs per-step state or per-env extras (recurrent core state,
-        # IMPALA's behaviour logits, MCTS planning) that a weightless
-        # InferenceClientActor cannot produce — reject at config time
-        # rather than crash in the batcher thread mid-run.
-        custom_batched = (type(builder).make_batched_actor
-                          is not AgentBuilder.make_batched_actor)
-        if policy is None or custom_batched \
-                or not policy_is_feed_forward(policy):
-            raise ValueError(
-                f"{type(builder).__name__} does not support "
-                f"inference='server': the server batches plain "
-                f"(params, key, obs) -> action policies only (no recurrent "
-                f"state, no per-step extras) — keep inference='local' for "
-                f"this agent")
         # window sized so one full sweep of the fleet fits in a single
         # forward pass (requests are rows: num_envs per vectorized actor);
         # max_batch_size=num_envs disables coalescing (one request per
@@ -488,12 +469,38 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                 f"inference_max_batch_size={max_batch} cannot hold one "
                 f"vectorized actor's request of num_envs_per_actor="
                 f"{num_envs} rows (requests are never split)")
-        inference_server = InferenceServer(
-            policy, worker if worker is not None else learner,
+        # Builders with stateful serving (KV caches, recurrent cores) bring
+        # their own service; everyone else gets the generic batcher.
+        inference_server = builder.make_inference_server(
+            worker if worker is not None else learner,
             max_batch_size=max_batch,
             max_wait_ms=inference_max_wait_ms,
             update_period=options.variable_update_period,
             rng_seed=seed + 777_777)
+        if inference_server is None:
+            policy = builder.make_policy(evaluation=False)
+            # Generic server inference supports exactly the builders that
+            # use the DEFAULT feed-forward batched actor: an override means
+            # the agent needs per-step state or per-env extras (recurrent
+            # core state, IMPALA's behaviour logits, MCTS planning) that a
+            # weightless InferenceClientActor cannot produce — reject at
+            # config time rather than crash in the batcher thread mid-run.
+            custom_batched = (type(builder).make_batched_actor
+                              is not AgentBuilder.make_batched_actor)
+            if policy is None or custom_batched \
+                    or not policy_is_feed_forward(policy):
+                raise ValueError(
+                    f"{type(builder).__name__} does not support "
+                    f"inference='server': the server batches plain "
+                    f"(params, key, obs) -> action policies only (no "
+                    f"recurrent state, no per-step extras) — keep "
+                    f"inference='local' for this agent")
+            inference_server = InferenceServer(
+                policy, worker if worker is not None else learner,
+                max_batch_size=max_batch,
+                max_wait_ms=inference_max_wait_ms,
+                update_period=options.variable_update_period,
+                rng_seed=seed + 777_777)
 
     # What crosses into worker processes: a picklable builder stand-in when
     # the backend needs one, the shared builder instance otherwise.
@@ -536,7 +543,8 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     if inference_server is not None:
         inference_handle = program.add_node(
             "inference", lambda: inference_server, role="service",
-            interface=INFERENCE_INTERFACE)
+            interface=getattr(inference_server, "INTERFACE",
+                              INFERENCE_INTERFACE))
     program.add_node(
         "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
         counter_handle, replay_handle,

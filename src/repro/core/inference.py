@@ -29,13 +29,17 @@ traffic scales with forward passes, not with actors.  ``stop()`` fails
 pending and future callers with ``CourierClosed`` — a ConnectionError, which
 launcher shutdown-noise classification already treats as benign once a stop
 is in flight.
+
+The coalescing machinery is factored into ``_BatchingServer`` so services
+with richer request shapes (``repro.policies``' stateful KV-cache serving)
+reuse the window/queue/shutdown semantics and only supply ``_execute``.
 """
 from __future__ import annotations
 
 import inspect
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -63,75 +67,54 @@ def policy_is_feed_forward(policy: Callable) -> bool:
 
 
 class _Request:
-    __slots__ = ("observations", "rows", "event", "result", "error")
+    __slots__ = ("payload", "rows", "event", "result", "error")
 
-    def __init__(self, observations: np.ndarray):
-        self.observations = observations
-        self.rows = observations.shape[0]
+    def __init__(self, payload: Any, rows: int):
+        self.payload = payload
+        self.rows = rows
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
 
 
-class InferenceServer:
-    """Coalesce ``select_action`` requests into one batched forward pass.
+class _BatchingServer:
+    """Request coalescing, the batcher thread, and shutdown plumbing.
 
-    ``policy`` is the per-example behaviour policy ``(params, key, obs) ->
-    action`` every builder already provides; ``variable_source`` is anything
-    with ``get_variables`` (the learner, or a handle to it).
+    Subclasses call ``_submit(payload, rows)`` from their RPC methods and
+    implement ``_execute(batch) -> (results, extra_stats)`` where
+    ``results`` has one entry per request (assigned in order) and
+    ``extra_stats`` maps stat names to increments merged under the lock.
     """
 
-    def __init__(self, policy: Callable, variable_source,
-                 max_batch_size: int = 64, max_wait_ms: float = 2.0,
-                 update_period: int = 10, rng_seed: int = 0,
-                 jit: bool = True):
+    def __init__(self, max_batch_size: int = 64, max_wait_ms: float = 2.0):
         if max_batch_size < 1:
             raise ValueError(f"max_batch_size must be >= 1, "
                              f"got {max_batch_size}")
         if max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
-        if not policy_is_feed_forward(policy):
-            raise ValueError(
-                "InferenceServer batches feed-forward policies "
-                "(params, key, obs); recurrent policies would need per-client "
-                "state tracking — use inference='local' for those agents")
-
-        # the SAME key-derivation scheme the batched actors use (fold_in the
-        # batch counter on device, split per-row keys, vmap)
-        batched = _batched_policy(policy)
-        self._policy = jax.jit(batched) if jit else batched
-        self._client = VariableClient(variable_source,
-                                      update_period=max(update_period, 1))
         self._max_batch = int(max_batch_size)
         self._max_wait_s = float(max_wait_ms) / 1000.0
-        self._key = jax.random.key(rng_seed)
-        self._batch_counter = 0
 
         self._cond = threading.Condition()
         self._pending: List[_Request] = []
         self._stopped = False
-        self._stats = {"requests": 0, "rows": 0, "batches": 0,
-                       "padded_rows": 0}
+        self._stats: Dict[str, Any] = {"requests": 0, "rows": 0, "batches": 0}
         self._thread = threading.Thread(target=self._batch_loop,
                                         name="inference_server",
                                         daemon=True)
         self._thread.start()
 
     # ------------------------------------------------------------- RPC side
-    def select_action(self, observations) -> np.ndarray:
-        """Batch in, batch out: ``(k, *obs_shape) -> (k, *action_shape)``.
-
-        Blocks until this request's rows come back from a coalesced forward
-        pass.  Raises ``CourierClosed`` once the server is stopped.
-        """
+    def _submit(self, payload: Any, rows: int):
+        """Enqueue one request and block until its rows come back from a
+        coalesced forward pass.  Raises ``CourierClosed`` once stopped."""
         from repro.distributed.courier import CourierClosed
 
-        obs = np.asarray(observations)
-        if obs.shape[0] > self._max_batch:
+        if rows > self._max_batch:
             raise ValueError(
-                f"request of {obs.shape[0]} rows exceeds max_batch_size="
+                f"request of {rows} rows exceeds max_batch_size="
                 f"{self._max_batch}")
-        request = _Request(obs)
+        request = _Request(payload, rows)
         with self._cond:
             if self._stopped:
                 raise CourierClosed("inference server stopped")
@@ -157,6 +140,10 @@ class InferenceServer:
         self._thread.join(timeout=5)
 
     # ------------------------------------------------------- batcher thread
+    def _execute(self, batch: List[_Request]) -> Tuple[Sequence[Any],
+                                                       Dict[str, Any]]:
+        raise NotImplementedError
+
     def _collect(self) -> List[_Request]:
         """Block until a coalescing window closes; return its requests."""
         with self._cond:
@@ -186,30 +173,15 @@ class InferenceServer:
 
     def _run_batch(self, batch: List[_Request]):
         try:
-            rows = sum(r.rows for r in batch)
-            obs = np.concatenate([r.observations for r in batch], axis=0)
-            # pad to a power-of-two bucket: a bounded set of compiled shapes
-            bucket = 1
-            while bucket < rows:
-                bucket *= 2
-            bucket = min(bucket, self._max_batch)
-            if obs.shape[0] < bucket:
-                pad = np.zeros((bucket - obs.shape[0],) + obs.shape[1:],
-                               obs.dtype)
-                obs = np.concatenate([obs, pad], axis=0)
-            self._client.update()   # period counts BATCHES, not requests
-            actions = np.asarray(self._policy(
-                self._client.params, self._key, self._batch_counter, obs))
-            self._batch_counter = (self._batch_counter + 1) % STEP_MOD
+            results, extra = self._execute(batch)
             with self._cond:
                 self._stats["batches"] += 1
                 self._stats["requests"] += len(batch)
-                self._stats["rows"] += rows
-                self._stats["padded_rows"] += bucket - rows
-            offset = 0
-            for request in batch:
-                request.result = actions[offset:offset + request.rows]
-                offset += request.rows
+                self._stats["rows"] += sum(r.rows for r in batch)
+                for k, v in extra.items():
+                    self._stats[k] = self._stats.get(k, 0) + v
+            for request, result in zip(batch, results):
+                request.result = result
                 request.event.set()
         except BaseException as e:   # noqa: BLE001 — forwarded to callers
             for request in batch:
@@ -234,3 +206,67 @@ class InferenceServer:
                 if self._stopped:
                     break
         self._fail_pending()
+
+
+class InferenceServer(_BatchingServer):
+    """Coalesce ``select_action`` requests into one batched forward pass.
+
+    ``policy`` is the per-example behaviour policy ``(params, key, obs) ->
+    action`` every builder already provides; ``variable_source`` is anything
+    with ``get_variables`` (the learner, or a handle to it).
+    """
+
+    def __init__(self, policy: Callable, variable_source,
+                 max_batch_size: int = 64, max_wait_ms: float = 2.0,
+                 update_period: int = 10, rng_seed: int = 0,
+                 jit: bool = True):
+        if not policy_is_feed_forward(policy):
+            raise ValueError(
+                "InferenceServer batches feed-forward policies "
+                "(params, key, obs); recurrent policies would need per-client "
+                "state tracking — use inference='local' for those agents")
+
+        # the SAME key-derivation scheme the batched actors use (fold_in the
+        # batch counter on device, split per-row keys, vmap)
+        batched = _batched_policy(policy)
+        self._policy = jax.jit(batched) if jit else batched
+        self._client = VariableClient(variable_source,
+                                      update_period=max(update_period, 1))
+        self._key = jax.random.key(rng_seed)
+        self._batch_counter = 0
+        super().__init__(max_batch_size=max_batch_size,
+                         max_wait_ms=max_wait_ms)
+        with self._cond:
+            self._stats.setdefault("padded_rows", 0)
+
+    def select_action(self, observations) -> np.ndarray:
+        """Batch in, batch out: ``(k, *obs_shape) -> (k, *action_shape)``.
+
+        Blocks until this request's rows come back from a coalesced forward
+        pass.  Raises ``CourierClosed`` once the server is stopped.
+        """
+        obs = np.asarray(observations)
+        return self._submit(obs, obs.shape[0])
+
+    def _execute(self, batch: List[_Request]):
+        rows = sum(r.rows for r in batch)
+        obs = np.concatenate([r.payload for r in batch], axis=0)
+        # pad to a power-of-two bucket: a bounded set of compiled shapes
+        bucket = 1
+        while bucket < rows:
+            bucket *= 2
+        bucket = min(bucket, self._max_batch)
+        if obs.shape[0] < bucket:
+            pad = np.zeros((bucket - obs.shape[0],) + obs.shape[1:],
+                           obs.dtype)
+            obs = np.concatenate([obs, pad], axis=0)
+        self._client.update()   # period counts BATCHES, not requests
+        actions = np.asarray(self._policy(
+            self._client.params, self._key, self._batch_counter, obs))
+        self._batch_counter = (self._batch_counter + 1) % STEP_MOD
+        results = []
+        offset = 0
+        for request in batch:
+            results.append(actions[offset:offset + request.rows])
+            offset += request.rows
+        return results, {"padded_rows": bucket - rows}

@@ -18,13 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_arch, reduced
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import make_batched_prefill_step, make_serve_step
 from repro.models import transformer
 
 
 class BatchedServer:
     def __init__(self, cfg, batch_slots: int = 4, max_len: int = 128,
-                 seed: int = 0):
+                 seed: int = 0, batched_prefill: bool = True):
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -32,16 +32,33 @@ class BatchedServer:
         self.cache = transformer.init_cache(cfg, batch_slots, max_len,
                                             jnp.float32)
         self._serve = jax.jit(make_serve_step(cfg))
+        # Whole-prompt prefill in one jitted call; dense-family archs only —
+        # ssm/hybrid/audio caches still replay the prompt token-at-a-time.
+        self._prefill = (jax.jit(make_batched_prefill_step(cfg))
+                         if batched_prefill and
+                         cfg.arch_type in ("dense", "moe") else None)
         self.pos = 0
+
+    def prefill(self, prompts: np.ndarray):
+        """Run the prompt through the cache; returns the first sampled
+        token (slots, 1).  One jitted call when the arch supports batched
+        prefill, otherwise one ``serve_step`` per prompt token."""
+        prompt_len = prompts.shape[1]
+        if self._prefill is not None:
+            tok, _, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(prompts))
+            return tok
+        tok = None
+        for t in range(prompt_len):
+            tok, _, self.cache = self._serve(
+                self.params, self.cache, jnp.asarray(prompts[:, t:t + 1]),
+                jnp.int32(t))
+        return tok
 
     def generate(self, prompts: np.ndarray, decode_len: int):
         """prompts: (slots, prompt_len) int32. Lockstep batched decode."""
         prompt_len = prompts.shape[1]
-        tok = None
-        for t in range(prompt_len):
-            tok, logits, self.cache = self._serve(
-                self.params, self.cache, jnp.asarray(prompts[:, t:t + 1]),
-                jnp.int32(t))
+        tok = self.prefill(prompts)
         outs = [np.asarray(tok)]
         for i in range(decode_len - 1):
             tok, logits, self.cache = self._serve(

@@ -147,9 +147,34 @@ def make_prefill_step(cfg: ArchConfig, *, remat="none", chunk: int = 1024):
     return prefill_step
 
 
-def make_serve_step(cfg: ArchConfig):
+def make_serve_step(cfg: ArchConfig, *, backend: str = "jnp"):
+    """One-token incremental decode against the cache.  ``backend`` selects
+    the decode-attention path on dense archs: ``"jnp"`` (pure XLA),
+    ``"kernel"`` (pallas ``decode_attention``), ``"ref"`` (the kernels/ref.py
+    oracle), or ``"auto"`` (kernel on TPU, ref elsewhere)."""
+
     def serve_step(params, cache, token, pos):
-        logits, cache = transformer.decode_step(params, cfg, cache, token, pos)
+        logits, cache = transformer.decode_step(params, cfg, cache, token, pos,
+                                                backend=backend)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return next_token, logits, cache
     return serve_step
+
+
+def make_batched_prefill_step(cfg: ArchConfig):
+    """Whole-prompt prefill THROUGH the decode cache in one jitted call —
+    the batched replacement for stepping ``serve_step`` once per prompt
+    token.  Dense-family archs with the stacked ``"kv"`` cache layout only
+    (``transformer.prefill`` raises otherwise).
+
+    Returns ``prefill_step(params, cache, tokens, lengths=None) ->
+    (next_token (b, 1) int32, logits (b, V), cache)`` where ``tokens`` is
+    right-padded (b, s) and ``lengths`` masks the padding; decode then
+    continues at position ``lengths[i]`` (or ``s``)."""
+
+    def prefill_step(params, cache, tokens, lengths=None):
+        logits, cache = transformer.prefill(params, cfg, cache, tokens,
+                                            lengths=lengths)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+    return prefill_step

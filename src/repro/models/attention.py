@@ -9,8 +9,10 @@ GQA K/V are stored with ``num_kv_heads`` (cache compression) and broadcast to
 the full head count at compute time — the broadcast keeps every score tensor
 laid out (batch, heads, q, k) so SPMD head-sharding propagates cleanly.
 
-Positions are 1-D ``(seq,)`` — shared across the batch, which is true for all
-our training/prefill/decode paths.
+Positions are 1-D ``(seq,)`` — shared across the batch — on the training and
+prefill paths; ``decode_attention`` additionally accepts per-row ``(b,)``
+positions so continuous-batching servers can decode requests that are at
+different depths of their episodes in ONE dispatch.
 """
 from __future__ import annotations
 
@@ -49,8 +51,10 @@ def _project_qkv(params, cfg: ArchConfig, x, positions, rope: bool = True):
         q = layers.head_rmsnorm(params["q_norm"], q, cfg.rmsnorm_eps)
         k = layers.head_rmsnorm(params["k_norm"], k, cfg.rmsnorm_eps)
     if rope and cfg.rope_theta > 0:
-        q = layers.apply_rope(q, positions[None, :], cfg.rope_theta)
-        k = layers.apply_rope(k, positions[None, :], cfg.rope_theta)
+        # positions: (s,) shared across the batch, or (b, s) per-row
+        pos2d = positions if positions.ndim == 2 else positions[None, :]
+        q = layers.apply_rope(q, pos2d, cfg.rope_theta)
+        k = layers.apply_rope(k, pos2d, cfg.rope_theta)
     q = shard(q, "batch", "seq", "heads", "head_dim")
     k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
     v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
@@ -143,14 +147,39 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def _decode_backend(backend: str, length: int) -> str:
+    """Resolve ``"auto"`` to a concrete decode backend.
+
+    The pallas flash-decoding kernel requires the cache length to divide its
+    k-block, and interpret mode (how pallas runs off-TPU) is far slower than
+    plain jnp — so ``auto`` picks the kernel only on a real TPU and falls
+    back to the pure-jnp ``kernels/ref.py`` oracle everywhere else.
+    """
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if backend == "kernel" and length % min(512, length) != 0:
+        backend = "ref"
+    return backend
+
+
 def decode_attention(params, cfg: ArchConfig, x, cache, pos, *,
-                     cross_kv: Optional[tuple] = None):
-    """One-token decode. x: (b, 1, d); pos: scalar int32 (current index).
+                     cross_kv: Optional[tuple] = None, backend: str = "jnp"):
+    """One-token decode. x: (b, 1, d); pos: scalar int32 (current index) or
+    ``(b,)`` int32 per-row positions (continuous batching: rows at different
+    episode depths decoded in one dispatch).
 
     K is stored pre-RoPE'd.  Returns (out, new_cache).
     For ``cross_kv`` (whisper) the cache is passed through untouched.
+
+    ``backend`` selects the score/softmax path once the cache is updated:
+    ``"jnp"`` (grouped-GQA einsum), ``"kernel"`` (the pallas flash-decoding
+    kernel — MHA layout, per-row valid prefix lengths), ``"ref"`` (the
+    pure-jnp ``kernels/ref.py`` oracle, the CPU fallback), or ``"auto"``
+    (kernel on TPU when the cache length divides the k-block, ref elsewhere).
     """
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    vector_pos = pos.ndim == 1
+    positions = pos[:, None] if vector_pos else jnp.full((1,), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(params, cfg, x, positions, rope=cross_kv is None)
     scale = cfg.head_dim ** -0.5
 
@@ -164,7 +193,9 @@ def decode_attention(params, cfg: ArchConfig, x, cache, pos, *,
         qg = q.reshape(b, 1, k.shape[2], cfg.q_per_kv, cfg.head_dim)
         scores = jnp.einsum("bqngh,bsnh->bngqs", qg, k) * scale
         if valid is not None:
-            scores = jnp.where(valid.reshape(1, 1, 1, 1, -1), scores, NEG_INF)
+            vshape = ((valid.shape[0], 1, 1, 1, -1) if valid.ndim == 2
+                      else (1, 1, 1, 1, -1))
+            scores = jnp.where(valid.reshape(vshape), scores, NEG_INF)
         p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
         out = jnp.einsum("bngqs,bsnh->bqngh", p, v)
         out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim)
@@ -176,15 +207,88 @@ def decode_attention(params, cfg: ArchConfig, x, cache, pos, *,
 
     length = cache["k"].shape[1]
     slot = jnp.mod(pos, length) if cfg.sliding_window else pos
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    if vector_pos:
+        rows = jnp.arange(k_new.shape[0])
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
     new_cache = {"k": k, "v": v}
 
+    backend = _decode_backend(backend, length)
+    if backend in ("kernel", "ref"):
+        # Both kernels mask a VALID PREFIX per row.  That is exactly the
+        # occupancy of our caches: a linear cache holds slots [0, pos] and a
+        # full ring holds all L slots — min(pos+1, L) either way.  Ring
+        # wraparound scrambles chronological order, but softmax attention is
+        # permutation-invariant over the key set and K is stored post-RoPE,
+        # so prefix masking stays correct after wrap.
+        lengths = jnp.broadcast_to(jnp.minimum(pos + 1, length),
+                                   (q.shape[0],)).astype(jnp.int32)
+        kf = _repeat_kv(k.astype(q.dtype), cfg.q_per_kv)
+        vf = _repeat_kv(v.astype(q.dtype), cfg.q_per_kv)
+        if backend == "kernel":
+            from repro.kernels import ops
+            out_h = ops.decode_attention(q[:, 0], kf, vf, lengths,
+                                         block_k=min(512, length))
+        else:
+            from repro.kernels import ref as kernels_ref
+            out_h = kernels_ref.decode_attention_ref(q[:, 0], kf, vf, lengths)
+        out = jnp.einsum("bhk,hkd->bd", out_h.astype(q.dtype),
+                         params["wo"])[:, None]
+        return out, new_cache
+    if backend != "jnp":
+        raise ValueError(f"unknown decode backend {backend!r}")
+
     slots = jnp.arange(length)
+    pos_col = pos[:, None] if vector_pos else pos
     if cfg.sliding_window:
         # slot s holds token pos - ((pos - s) mod L); valid if that is >= 0
-        token_idx = pos - jnp.mod(pos - slots, length)
+        token_idx = pos_col - jnp.mod(pos_col - slots, length)
         valid = token_idx >= 0
     else:
-        valid = slots <= pos
+        valid = slots <= pos_col
     return score_softmax_out(k, v, valid), new_cache
+
+
+def prefill_attention(params, cfg: ArchConfig, x, cache, positions,
+                      lengths=None):
+    """Batched prompt prefill THROUGH the decode cache: one call writes the
+    whole prompt's K/V into slots [0, s) and returns full-sequence outputs.
+
+    x: (b, s, d); positions: (s,) shared across rows (prompts are
+    left-aligned at 0..s-1); lengths: optional (b,) valid prompt lengths —
+    keys at or beyond a row's length are masked out (shorter prompts and
+    zero-padded batch slots), though their outputs are still computed
+    (callers read only positions < length).  Returns (out, new_cache).
+
+    The prompt must fit the cache (s <= cache length): continuous-batching
+    callers re-prefill from a bounded window rather than wrap mid-prompt.
+    """
+    s = x.shape[1]
+    length = cache["k"].shape[1]
+    if s > length:
+        raise ValueError(f"prompt of {s} tokens exceeds cache length {length}")
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k_cache = cache["k"].at[:, :s].set(k_new.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[:, :s].set(v_new.astype(cache["v"].dtype))
+    new_cache = {"k": k_cache, "v": v_cache}
+
+    k = _repeat_kv(k_new, cfg.q_per_kv)
+    v = _repeat_kv(v_new, cfg.q_per_kv)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) * scale
+    mask = positions[:, None] >= positions[None, :]
+    if cfg.sliding_window is not None:
+        mask &= (positions[:, None] - positions[None, :]) < cfg.sliding_window
+    mask = mask[None, None]                                # (1, 1, s, s)
+    if lengths is not None:
+        mask = mask & (positions[None, None, None, :]
+                       < lengths[:, None, None, None])
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", p, v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache

@@ -10,6 +10,13 @@ Public API:
   forward(params, cfg, batch, remat=...)     -> (logits, aux_losses)
   init_cache(cfg, batch, max_len, dtype)     -> decode cache
   decode_step(params, cfg, cache, token, pos)-> (logits, new_cache)
+  prefill(params, cfg, cache, tokens)        -> (last logits, new_cache)
+
+The ``*_embedded`` variants (``forward_embedded``, ``prefill_embedded``,
+``decode_step_embedded``) run the dense stack over caller-supplied
+embeddings instead of token ids and return features instead of logits — the
+entry points for non-LM heads like ``repro.policies`` (observation
+embeddings in, Q-values out).
 """
 from __future__ import annotations
 
@@ -232,6 +239,23 @@ def forward_features(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array
     return x, aux
 
 
+def forward_embedded(params: Params, cfg: ArchConfig, x, *, positions=None,
+                     remat: str = "none"):
+    """Dense-stack forward over PRE-EMBEDDED inputs.
+
+    x: (b, s, d_model) — e.g. projected observations rather than token
+    embeddings.  Runs ``params["blocks"]`` + final norm and returns
+    (features (b, s, d_model), aux).  Dense-family archs only.
+    """
+    if cfg.arch_type not in ("dense", "moe"):
+        raise ValueError(
+            f"forward_embedded supports dense/moe archs, got {cfg.arch_type}")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    x, aux = _run_dense_stack(params["blocks"], cfg, x, positions, remat)
+    return layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps), aux
+
+
 def unembed_table(params: Params, cfg: ArchConfig):
     return params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["table"]
 
@@ -306,10 +330,11 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     raise ValueError(cfg.arch_type)
 
 
-def _decode_dense_block(bp, cfg, x, kv_cache, pos, cross_kv=None):
+def _decode_dense_block(bp, cfg, x, kv_cache, pos, cross_kv=None,
+                        backend="jnp"):
     h, kv_cache = attn.decode_attention(
         bp["attn"], cfg, layers.rmsnorm(bp["ln1"], x, cfg.rmsnorm_eps),
-        kv_cache, pos)
+        kv_cache, pos, backend=backend)
     x = x + h
     if cross_kv is not None:
         h, _ = attn.decode_attention(
@@ -324,14 +349,33 @@ def _decode_dense_block(bp, cfg, x, kv_cache, pos, cross_kv=None):
     return x + f, kv_cache
 
 
+def _prefill_dense_block(bp, cfg, x, kv_cache, positions, lengths=None):
+    """``_decode_dense_block``'s batched-prompt twin: the whole prompt's K/V
+    lands in the cache in one attention call, not one call per token."""
+    h, kv_cache = attn.prefill_attention(
+        bp["attn"], cfg, layers.rmsnorm(bp["ln1"], x, cfg.rmsnorm_eps),
+        kv_cache, positions, lengths=lengths)
+    x = x + h
+    y = layers.rmsnorm(bp["ln2"], x, cfg.rmsnorm_eps)
+    if cfg.arch_type == "moe":
+        f, _ = moe_lib.moe_ffn(bp["moe"], cfg, y)
+    else:
+        f = layers.mlp(bp["mlp"], y)
+    return x + f, kv_cache
+
+
 def _decode_ssm_block(bp, cfg, x, cache):
     h, cache = ssm_lib.ssm_step(bp["ssm"], cfg,
                                 layers.rmsnorm(bp["ln"], x, cfg.rmsnorm_eps), cache)
     return x + h, cache
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache, token, pos):
-    """token: (b, 1) int32; pos: scalar int32. Returns (logits (b, V), cache)."""
+def decode_step(params: Params, cfg: ArchConfig, cache, token, pos, *,
+                backend: str = "jnp"):
+    """token: (b, 1) int32; pos: scalar int32 (or (b,) per-row positions for
+    dense-family archs). Returns (logits (b, V), cache).  ``backend`` picks
+    the decode-attention path (jnp | kernel | ref | auto) on dense archs.
+    """
     x = layers.embed(params["embed"], token)
     x = shard(x, "batch", None, "d_model")
 
@@ -340,13 +384,15 @@ def decode_step(params: Params, cfg: ArchConfig, cache, token, pos):
             new_list = []
             for i, kv in enumerate(cache["kv_list"]):
                 bp = jax.tree.map(lambda p: p[i], params["blocks"])
-                x, kv = _decode_dense_block(bp, cfg, x, kv, pos)
+                x, kv = _decode_dense_block(bp, cfg, x, kv, pos,
+                                            backend=backend)
                 new_list.append(kv)
             new_cache = {"kv_list": new_list}
         else:
             def body(x, layer_in):
                 bp, kv = layer_in
-                x, kv = _decode_dense_block(bp, cfg, x, kv, pos)
+                x, kv = _decode_dense_block(bp, cfg, x, kv, pos,
+                                            backend=backend)
                 return x, kv
             x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
             new_cache = {"kv": new_kv}
@@ -406,5 +452,85 @@ def decode_step(params: Params, cfg: ArchConfig, cache, token, pos):
 
     x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
     logits = layers.unembed(unembed_table(params, cfg), x)[:, 0]
+    logits = mask_pad_logits(logits, cfg)
+    return shard(logits, "batch", "vocab"), new_cache
+
+
+def prefill_embedded(params: Params, cfg: ArchConfig, cache, x, *,
+                     lengths=None):
+    """Batched prompt prefill over PRE-EMBEDDED inputs.
+
+    x: (b, s, d_model) with s <= cache length; rows shorter than ``s`` are
+    right-padded and masked out via ``lengths`` (b,) int32.  The whole
+    prompt's K/V lands in the cache in ONE call per layer, so decode can
+    continue at position ``lengths[i]`` without per-token replay.  Stacked
+    ``"kv"`` cache layout, dense-family archs only.
+
+    Returns (features (b, s, d_model), new_cache).
+    """
+    if cfg.arch_type not in ("dense", "moe"):
+        raise ValueError(
+            f"prefill_embedded supports dense/moe archs, got {cfg.arch_type}")
+    if "kv" not in cache:
+        raise ValueError("prefill_embedded needs the stacked 'kv' cache layout")
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, layer_in):
+        bp, kv = layer_in
+        x, kv = _prefill_dense_block(bp, cfg, x, kv, positions,
+                                     lengths=lengths)
+        return x, kv
+    x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+    return layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps), \
+        {"kv": new_kv}
+
+
+def decode_step_embedded(params: Params, cfg: ArchConfig, cache, x, pos, *,
+                         backend: str = "jnp"):
+    """Incremental decode over PRE-EMBEDDED inputs.
+
+    x: (b, 1, d_model); pos: scalar int32 or per-row (b,) int32 positions
+    (continuous batching — each row advances independently).  Stacked
+    ``"kv"`` cache layout, dense-family archs only.
+
+    Returns (features (b, d_model), new_cache).
+    """
+    if cfg.arch_type not in ("dense", "moe"):
+        raise ValueError(
+            f"decode_step_embedded supports dense/moe archs, got {cfg.arch_type}")
+    if "kv" not in cache:
+        raise ValueError(
+            "decode_step_embedded needs the stacked 'kv' cache layout")
+
+    def body(x, layer_in):
+        bp, kv = layer_in
+        x, kv = _decode_dense_block(bp, cfg, x, kv, pos, backend=backend)
+        return x, kv
+    x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return x[:, 0], {"kv": new_kv}
+
+
+def prefill(params: Params, cfg: ArchConfig, cache, tokens, *, lengths=None):
+    """Batched token prefill: embed, run the stack through the cache, and
+    return next-token logits at each row's last REAL token.
+
+    tokens: (b, s) int32, right-padded; lengths: (b,) int32 real lengths
+    (None means every row uses all ``s`` tokens).  Dense-family archs with
+    the stacked ``"kv"`` cache layout only.
+
+    Returns (logits (b, V), new_cache) — decode continues at position
+    ``lengths[i]`` (or ``s``).
+    """
+    x = layers.embed(params["embed"], tokens)
+    x = shard(x, "batch", None, "d_model")
+    feats, new_cache = prefill_embedded(params, cfg, cache, x,
+                                        lengths=lengths)
+    if lengths is None:
+        last = feats[:, -1]
+    else:
+        rows = jnp.arange(feats.shape[0])
+        last = feats[rows, jnp.maximum(lengths - 1, 0)]
+    logits = layers.unembed(unembed_table(params, cfg), last)
     logits = mask_pad_logits(logits, cfg)
     return shard(logits, "batch", "vocab"), new_cache

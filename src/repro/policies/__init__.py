@@ -1,0 +1,25 @@
+"""Transformer policies on the serving fast path (§3.2 agents × §4 serving).
+
+``repro.policies`` puts ``repro.models.transformer`` on the RL acting hot
+path: a sliding window of observations is the policy's token sequence,
+acting runs incremental KV-cache decode (optionally on the pallas
+``decode_attention`` kernel), and ``inference="server"`` programs serve
+every actor from one continuous-batching ``TransformerInferenceServer``
+with per-episode cache slots.
+"""
+from repro.policies.builder import (TransformerPolicy,
+                                    TransformerPolicyBuilder)
+from repro.policies.cache import CacheSlotsExhausted, KVCachePool
+from repro.policies.config import TransformerPolicyConfig
+from repro.policies.engine import PolicyEngine
+from repro.policies.serving import TransformerInferenceServer
+
+__all__ = [
+    "CacheSlotsExhausted",
+    "KVCachePool",
+    "PolicyEngine",
+    "TransformerInferenceServer",
+    "TransformerPolicy",
+    "TransformerPolicyBuilder",
+    "TransformerPolicyConfig",
+]

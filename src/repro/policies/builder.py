@@ -1,0 +1,147 @@
+"""``TransformerPolicyBuilder``: the transformer policy as an Acme agent.
+
+Implements the ``AgentBuilder`` protocol end to end: a sequence adder
+through the existing prioritized replay, the sequence double-DQN learner
+over replayed windows, windowed actors running incremental KV-cache decode
+through a ``PolicyEngine``, and — for ``inference="server"`` programs — a
+``TransformerInferenceServer`` doing continuous batching over per-episode
+cache slots with the pallas ``decode_attention`` kernel on the forward
+pass (``kernels/ref.py`` fallback off-TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.builders import AgentBuilder, BuilderOptions
+from repro.core.types import EnvironmentSpec
+from repro.policies import learning, network
+from repro.policies.config import TransformerPolicyConfig
+from repro.policies.engine import PolicyEngine
+
+
+class TransformerPolicy:
+    """The policy as a plain ``(params, key, obs) -> action`` callable.
+
+    ``obs`` is ``{"window": (W, *obs_shape), "length": ()}`` — a full
+    left-aligned observation window; the forward pass is FULL-sequence
+    recompute (``q_sequence``), which makes this the parity oracle for the
+    engine's incremental KV-cache decode.  It also carries the arch/shape
+    metadata actors and servers derive engines from.
+    """
+
+    def __init__(self, arch, obs_shape, num_actions: int, epsilon: float,
+                 backend: str, cache_slots: int, slot_timeout_s: float):
+        self.arch = arch
+        self.obs_shape = tuple(obs_shape)
+        self.num_actions = num_actions
+        self.epsilon = float(epsilon)
+        self.backend = backend
+        self.cache_slots = cache_slots
+        self.slot_timeout_s = slot_timeout_s
+
+    def __call__(self, params, key, obs):
+        window = obs["window"].astype(jnp.float32)
+        length = obs["length"].astype(jnp.int32)
+        q = network.q_sequence(params, self.arch,
+                               window.reshape(1, window.shape[0], -1))[0]
+        q_last = q[jnp.maximum(length - 1, 0)]
+        greedy = jnp.argmax(q_last).astype(jnp.int32)
+        rand = jax.random.randint(key, (), 0, self.num_actions)
+        explore = jax.random.uniform(key) < self.epsilon
+        return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+    def make_engine(self, *, num_slots: int, rng_seed: int = 0,
+                    jit: bool = True) -> PolicyEngine:
+        return PolicyEngine(self.arch, self.obs_shape, self.num_actions,
+                            num_slots=num_slots, epsilon=self.epsilon,
+                            backend=self.backend,
+                            slot_timeout_s=self.slot_timeout_s,
+                            rng_seed=rng_seed, jit=jit)
+
+
+class TransformerPolicyBuilder(AgentBuilder):
+    """DQN-style agent whose Q-network is a windowed transformer."""
+
+    def __init__(self, spec: EnvironmentSpec,
+                 cfg: TransformerPolicyConfig = None, seed: int = 0):
+        cfg = cfg or TransformerPolicyConfig()
+        super().__init__(BuilderOptions(
+            variable_update_period=10,
+            min_observations=cfg.min_replay_size,
+            observations_per_step=max(float(cfg.period), 1.0),
+            batch_size=cfg.batch_size))
+        self.spec = spec
+        self.cfg = cfg
+        self.seed = seed
+        self.num_actions = spec.actions.num_values
+        self.arch = network.make_arch(cfg, self.num_actions)
+
+    # ------------------------------------------------------- replay pipeline
+    def make_replay(self):
+        from repro import replay as r
+        cfg = self.cfg
+        if cfg.samples_per_insert > 0:
+            limiter = r.SampleToInsertRatio(
+                cfg.samples_per_insert, cfg.min_replay_size // cfg.period + 1,
+                error_buffer=max(2 * cfg.samples_per_insert * cfg.batch_size,
+                                 100))
+        else:
+            limiter = r.MinSize(max(cfg.min_replay_size // cfg.period, 1))
+        return r.Table("replay", cfg.max_replay_size, r.Prioritized(),
+                       limiter)
+
+    def make_adder(self, table):
+        from repro.adders.sequence import SequenceAdder
+        return SequenceAdder(table, self.cfg.sequence_length,
+                             period=self.cfg.period, priority=100.0)
+
+    def make_dataset(self, table):
+        from repro.replay import as_iterator
+        return as_iterator(table, self.cfg.batch_size)
+
+    def make_learner(self, iterator, priority_update_cb=None):
+        return learning.make_learner(self.spec, self.cfg, iterator,
+                                     jax.random.key(self.seed),
+                                     priority_update_cb=priority_update_cb)
+
+    # --------------------------------------------------------------- acting
+    def make_policy(self, evaluation: bool = False):
+        return TransformerPolicy(
+            self.arch, self.spec.observations.shape, self.num_actions,
+            epsilon=0.0 if evaluation else self.cfg.epsilon,
+            backend=self.cfg.backend, cache_slots=self.cfg.cache_slots,
+            slot_timeout_s=self.cfg.slot_timeout_s)
+
+    def make_actor(self, policy, variable_client, adder, seed: int = 0):
+        from repro.policies.actors import WindowedPolicyActor
+        engine = policy.make_engine(num_slots=1, rng_seed=seed)
+        return WindowedPolicyActor(engine, variable_client, adder)
+
+    def make_batched_actor(self, policy, variable_client, adders,
+                           seed: int = 0):
+        from repro.policies.actors import BatchedWindowedPolicyActor
+        engine = policy.make_engine(num_slots=max(len(adders), 1),
+                                    rng_seed=seed)
+        return BatchedWindowedPolicyActor(engine, variable_client, adders)
+
+    # -------------------------------------------------------------- serving
+    def make_inference_server(self, variable_source, *, max_batch_size: int,
+                              max_wait_ms: float, update_period: int,
+                              rng_seed: int = 0):
+        from repro.policies.serving import TransformerInferenceServer
+        policy = self.make_policy(evaluation=False)
+        engine = policy.make_engine(
+            num_slots=max(self.cfg.cache_slots, max_batch_size),
+            rng_seed=rng_seed)
+        return TransformerInferenceServer(
+            engine, variable_source, max_batch_size=max_batch_size,
+            max_wait_ms=max_wait_ms, update_period=update_period)
+
+    def make_inference_actor(self, inference, adder=None, adders=None):
+        from repro.policies.actors import WindowedInferenceClientActor
+        if adders is not None:
+            return WindowedInferenceClientActor(inference, adders=adders,
+                                                batched=True)
+        return WindowedInferenceClientActor(inference, adder=adder)

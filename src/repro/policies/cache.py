@@ -1,0 +1,160 @@
+"""KV-cache slot pool for continuous-batching policy serving.
+
+One device-resident batched cache (``transformer.init_cache`` over
+``num_slots + 1`` rows) backs every in-flight episode: each episode owns a
+SLOT (one batch row) for its lifetime and the server gathers the active
+rows, runs one forward pass, and scatters the updated rows back — the
+continuous batching ``launch/serve.py`` approximates with lockstep slot
+recycling, made per-episode.
+
+The extra row is a SCRATCH slot: batched forward passes are padded to
+power-of-two buckets and every pad row gathers/scatters the scratch slot,
+so padding never corrupts a live episode's cache.
+
+Slot lifecycle:
+
+- ``acquire(key)``: claim a free slot for episode ``key``; blocks up to
+  ``timeout`` (backpressure) and raises ``CacheSlotsExhausted`` after it.
+- ``release(key)`` / ``reset_slot(slot)``: recycle on episode end — the
+  cache rows are NOT zeroed, position metadata alone invalidates them.
+- ``invalidate_all()``: bump the pool generation after a server weight
+  refresh; slots with a stale generation are re-prefilled before their
+  next decode (stale-cache rejection — K/V computed under old weights
+  never mixes with fresh queries).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import jax
+
+from repro.models.config import ArchConfig
+from repro.policies import network
+
+
+class CacheSlotsExhausted(RuntimeError):
+    """All cache slots are held by live episodes and none freed in time."""
+
+
+class _Slot:
+    __slots__ = ("index", "key", "pos", "cache_pos", "generation")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.key = None
+        self.pos = -1             # last EPISODE step absorbed into the slot
+        self.cache_pos = -1       # last CACHE position written (ring index
+        #                           source; diverges from pos after a
+        #                           mid-episode re-prefill, which restarts
+        #                           the cache at window-relative positions)
+        self.generation = -1
+
+    def reset(self, key, generation: int):
+        self.key = key
+        self.pos = -1
+        self.cache_pos = -1
+        self.generation = generation
+
+
+class KVCachePool:
+    """``num_slots`` per-episode KV-cache slots over one batched cache."""
+
+    def __init__(self, arch: ArchConfig, num_slots: int,
+                 timeout_s: float = 5.0):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.arch = arch
+        self.num_slots = num_slots
+        self.scratch_index = num_slots        # pad rows land here
+        self.timeout_s = timeout_s
+        self.cache = network.init_cache(arch, num_slots + 1)
+
+        self._cond = threading.Condition()
+        self._slots = [_Slot(i) for i in range(num_slots)]
+        self._free = list(reversed(range(num_slots)))
+        self._by_key: Dict[object, _Slot] = {}
+        self.generation = 0
+        self.stats = {"acquires": 0, "releases": 0, "exhausted_waits": 0,
+                      "invalidations": 0}
+
+    # --------------------------------------------------------- slot metadata
+    def lookup(self, key) -> Optional[_Slot]:
+        with self._cond:
+            return self._by_key.get(key)
+
+    def acquire(self, key, timeout: Optional[float] = None) -> _Slot:
+        """Claim a slot for ``key`` (idempotent: an existing slot is
+        returned).  Blocks while all slots are held; raises
+        ``CacheSlotsExhausted`` after ``timeout`` seconds."""
+        timeout = self.timeout_s if timeout is None else timeout
+        with self._cond:
+            slot = self._by_key.get(key)
+            if slot is not None:
+                return slot
+            if not self._free:
+                self.stats["exhausted_waits"] += 1
+                self._cond.wait_for(lambda: bool(self._free), timeout)
+            if not self._free:
+                raise CacheSlotsExhausted(
+                    f"all {self.num_slots} KV-cache slots held by live "
+                    f"episodes (waited {timeout:.1f}s)")
+            slot = self._slots[self._free.pop()]
+            slot.reset(key, self.generation)
+            self._by_key[key] = slot
+            self.stats["acquires"] += 1
+            return slot
+
+    def release(self, key):
+        """Recycle ``key``'s slot (episode end / client disconnect)."""
+        with self._cond:
+            slot = self._by_key.pop(key, None)
+            if slot is None:
+                return
+            slot.key = None
+            slot.pos = -1
+            slot.cache_pos = -1
+            self._free.append(slot.index)
+            self.stats["releases"] += 1
+            self._cond.notify_all()
+
+    def release_prefix(self, key_prefix):
+        """Release every slot whose key is a tuple starting with
+        ``key_prefix`` — one client's whole env fleet on disconnect."""
+        with self._cond:
+            keys = [k for k in self._by_key
+                    if isinstance(k, tuple) and k and k[0] == key_prefix]
+        for k in keys:
+            self.release(k)
+
+    def reset_slot(self, slot: _Slot):
+        """Recycle a held slot in place (same key, fresh episode): the next
+        forward pass must PREFILL, never continue the stale positions."""
+        with self._cond:
+            slot.pos = -1
+            slot.cache_pos = -1
+            slot.generation = self.generation
+
+    def invalidate_all(self):
+        """Stale-cache rejection: mark every held slot's K/V as computed
+        under old weights.  Slots stay held — the next pass re-prefills."""
+        with self._cond:
+            self.generation += 1
+            self.stats["invalidations"] += 1
+
+    def held(self) -> int:
+        with self._cond:
+            return len(self._by_key)
+
+    # ------------------------------------------------------- device gather
+    def gather(self, indices):
+        """Sub-cache of rows ``indices`` (slot axis = axis 1: leaves are
+        (layers, slots, L, kv_heads, head_dim))."""
+        return jax.tree.map(lambda c: c[:, indices], self.cache)
+
+    def scatter(self, indices, sub_cache):
+        """Write updated rows back.  Duplicate indices (the scratch slot,
+        repeated for every pad row) are harmless: last write wins and
+        nothing reads the scratch row."""
+        self.cache = jax.tree.map(
+            lambda c, s: c.at[:, indices].set(s), self.cache, sub_cache)

@@ -1,0 +1,106 @@
+"""The transformer Q-network: observations in, Q-values out.
+
+Three views of ONE parameter set, all running the same
+``repro.models.transformer`` dense stack:
+
+- ``q_sequence``: full-sequence recompute over (B, T) observation windows —
+  the learner's forward pass and the parity oracle for the decode paths.
+- ``q_prefill``: batched prompt prefill THROUGH the KV cache (one call for
+  a whole window, right-padded rows masked via ``lengths``).
+- ``q_decode``: one-token incremental decode against the cache with
+  per-row positions — the serving hot path, optionally on the pallas
+  ``decode_attention`` kernel.
+
+Observations are embedded by a learned linear projection (``obs_proj``)
+instead of a token table, and Q-values come from a linear ``head`` instead
+of the unembedding — the ``*_embedded`` transformer entry points exist for
+exactly this.  ``sliding_window = window`` makes train-time attention
+banded, so the learner over length-T sequences and the actor over length-W
+windows compute the SAME function (RoPE is relative, so window-local
+positions are equivalent to absolute ones).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ArchConfig
+
+
+def make_arch(cfg, num_actions: int) -> ArchConfig:
+    """The ``ArchConfig`` for a policy; ``cfg`` is a TransformerPolicyConfig."""
+    return ArchConfig(
+        name="transformer_policy", arch_type="dense",
+        num_layers=cfg.num_layers, d_model=cfg.d_model,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        d_ff=cfg.d_ff, vocab_size=max(num_actions, 1),
+        head_dim=cfg.head_dim, rope_theta=10_000.0,
+        sliding_window=cfg.window, tie_embeddings=True,
+        source="repro.policies")
+
+
+def init(key, arch: ArchConfig, obs_dim: int, num_actions: int,
+         dtype=jnp.float32):
+    kp, kb, kh = jax.random.split(key, 3)
+    return {
+        "obs_proj": {
+            "w": layers.dense_init(kp, obs_dim, arch.d_model, dtype),
+            "b": jnp.zeros((arch.d_model,), dtype),
+        },
+        "blocks": transformer._stack_init(
+            kb, arch.num_layers,
+            lambda k: transformer._dense_block_init(k, arch, dtype)),
+        "final_norm": layers.rmsnorm_init(arch.d_model, dtype),
+        "head": layers.dense_init(kh, arch.d_model, num_actions, dtype),
+    }
+
+
+def embed_obs(params, obs):
+    """(..., obs_dim) float32 -> (..., d_model)."""
+    p = params["obs_proj"]
+    return jnp.einsum("...i,id->...d", obs, p["w"]) + p["b"]
+
+
+def _q_head(params, feats):
+    return jnp.einsum("...d,da->...a", feats, params["head"])
+
+
+def q_sequence(params, arch: ArchConfig, obs):
+    """Full-sequence Q-values: obs (B, T, obs_dim) -> (B, T, A)."""
+    x = embed_obs(params, obs)
+    feats, _ = transformer.forward_embedded(
+        {"blocks": params["blocks"], "final_norm": params["final_norm"]},
+        arch, x)
+    return _q_head(params, feats)
+
+
+def init_cache(arch: ArchConfig, batch: int):
+    """Decode caches sized to the policy window (the ring length)."""
+    return transformer.init_cache(arch, batch, arch.sliding_window,
+                                  jnp.float32)
+
+
+def q_prefill(params, arch: ArchConfig, cache, obs, lengths):
+    """Batched window prefill through the cache.
+
+    obs (b, W, obs_dim) LEFT-aligned, zero-padded on the right; lengths (b,)
+    real window lengths.  Returns ((b, W, A), new_cache) — decode continues
+    at per-row position ``lengths[i]``.
+    """
+    x = embed_obs(params, obs)
+    feats, cache = transformer.prefill_embedded(
+        {"blocks": params["blocks"], "final_norm": params["final_norm"]},
+        arch, cache, x, lengths=lengths)
+    return _q_head(params, feats), cache
+
+
+def q_decode(params, arch: ArchConfig, cache, obs, pos, *,
+             backend: str = "jnp"):
+    """One-observation incremental decode: obs (b, obs_dim), pos (b,) int32
+    true episode-step positions.  Returns ((b, A), new_cache)."""
+    x = embed_obs(params, obs)[:, None, :]
+    feats, cache = transformer.decode_step_embedded(
+        {"blocks": params["blocks"], "final_norm": params["final_norm"]},
+        arch, cache, x, pos, backend=backend)
+    return _q_head(params, feats), cache

@@ -57,6 +57,51 @@ class CatchEnvFactory:
 catch_env_factory = CatchEnvFactory()
 
 
+class TransformerCatchBuilderFactory:
+    """Picklable ``spec -> TransformerPolicyBuilder`` factory over
+    Catch-sized smoke presets; keyword knobs override
+    ``TransformerPolicyConfig`` fields.  ``samples_per_insert=0.0`` keeps
+    the synchronous agent loop from blocking mid-learner-step (sequence
+    adders insert ~once per Catch episode)."""
+
+    DEFAULTS = dict(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                    head_dim=16, d_ff=64, window=4, sequence_length=10,
+                    period=10, batch_size=8, min_replay_size=10,
+                    samples_per_insert=0.0, backend="jnp")
+
+    def __init__(self, seed: int = 0, **cfg_overrides):
+        self.seed = seed
+        self.cfg_kwargs = dict(self.DEFAULTS)
+        self.cfg_kwargs.update(cfg_overrides)
+
+    def __call__(self, spec):
+        from repro.policies import (TransformerPolicyBuilder,
+                                    TransformerPolicyConfig)
+        return TransformerPolicyBuilder(
+            spec, TransformerPolicyConfig(**self.cfg_kwargs), seed=self.seed)
+
+
+def make_transformer_catch_config(*, seed: int = 0, builder_seed: int = None,
+                                  **knobs):
+    """One transformer-policy-on-Catch smoke ``ExperimentConfig``:
+    ``TransformerPolicyConfig`` field names go to the builder factory,
+    everything else to the config."""
+    import dataclasses as _dc
+
+    from repro.experiments import ExperimentConfig
+    from repro.policies import TransformerPolicyConfig
+
+    cfg_fields = {f.name for f in _dc.fields(TransformerPolicyConfig)}
+    builder_knobs = {k: v for k, v in knobs.items() if k in cfg_fields}
+    config_knobs = {k: v for k, v in knobs.items() if k not in cfg_fields}
+    return ExperimentConfig(
+        builder_factory=TransformerCatchBuilderFactory(
+            seed=seed if builder_seed is None else builder_seed,
+            **builder_knobs),
+        environment_factory=catch_env_factory,
+        seed=seed, **config_knobs)
+
+
 def make_dqn_catch_config(*, seed: int = 0, builder_seed: int = None,
                           **knobs):
     """One DQN-on-Catch smoke ``ExperimentConfig``: ``DQNConfig`` field

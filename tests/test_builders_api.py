@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 
 import repro.agents  # noqa: F401  (imports register all builders)
+import repro.policies  # noqa: F401  (registers TransformerPolicyBuilder)
 from repro.builders import AgentBuilder, BuilderOptions, registered_builders
 from repro.core import EnvironmentLoop, VariableClient, make_environment_spec
 from repro.envs import Catch, DeepSea, PendulumSwingup
@@ -109,6 +110,17 @@ def _make_bc():
             Catch(seed=0))
 
 
+def _make_transformer_policy():
+    from repro.policies import (TransformerPolicyBuilder,
+                                TransformerPolicyConfig)
+    cfg = TransformerPolicyConfig(num_layers=1, d_model=32, num_heads=2,
+                                  num_kv_heads=1, head_dim=16, d_ff=64,
+                                  window=4, sequence_length=4, period=2,
+                                  batch_size=4, min_replay_size=4,
+                                  samples_per_insert=0.0, backend="jnp")
+    return TransformerPolicyBuilder(_catch_spec(), cfg, seed=0), Catch(seed=0)
+
+
 FACTORIES = {
     "DQNBuilder": _make_dqn,
     "DQfDBuilder": _make_dqfd,
@@ -118,6 +130,7 @@ FACTORIES = {
     "MCTSBuilder": _make_mcts,
     "ContinuousBuilder": _make_continuous,
     "BCBuilder": _make_bc,
+    "TransformerPolicyBuilder": _make_transformer_policy,
 }
 
 

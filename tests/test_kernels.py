@@ -54,6 +54,34 @@ def test_decode_attention_sweep(b, h, s, d, dtype):
                                atol=_tol(dtype), rtol=_tol(dtype))
 
 
+@pytest.mark.parametrize("b,h,s,d", [
+    (8, 2, 8, 16),     # pow-2 padded batch over a window-8 ring cache
+    (8, 4, 16, 32),    # the serve default: window 16, 4 heads post-GQA
+    (4, 2, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_policy_serve_shapes(b, h, s, d, dtype):
+    """Kernel-vs-ref at the exact shapes the transformer-policy serve step
+    emits: tiny window-length ring caches (s == sliding_window, far below
+    the LLM-serving sweep above), the batch padded to a power-of-two bucket
+    with scratch-slot rows, and cache-offset ``lengths`` mixing mid-episode
+    rows (length == s after the ring wraps), fresh prefixes, and length-1
+    pad/restart rows."""
+    q = jnp.asarray(RNG.randn(b, h, d), dtype)
+    k = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    v = jnp.asarray(RNG.randn(b, s, h, d), dtype)
+    lengths = np.full((b,), s, np.int32)
+    lengths[1::3] = RNG.randint(2, s, len(lengths[1::3]))  # mid-prefix rows
+    lengths[2::3] = 1                         # pad / episode-restart rows
+    lengths = jnp.asarray(lengths)
+    out = ops.decode_attention(q, k, v, lengths, block_k=min(512, s),
+                               interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [
     (1, 256, 2, 32, 16, 64),
     (2, 512, 4, 64, 32, 128),
