@@ -55,6 +55,10 @@ echo "[ci] smoke: transformer policy serving (fig17 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig17_transformer_serving.py --smoke
 
+echo "[ci] smoke: telemetry overhead (fig18 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig18_telemetry_overhead.py --smoke
+
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__
 python scripts/smoke_multiprocess.py

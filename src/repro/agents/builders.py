@@ -28,10 +28,37 @@ from repro.learners import (PARAM_SERVER_INTERFACE, LearnerReplicaWorker,
                             MultiLearner, ParameterServer)
 from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
 from repro.replay.service import REPLAY_INTERFACE
+from repro.telemetry import (HUB_INTERFACE, MetricsHub, MetricsPusher,
+                             WorkerTelemetry)
+from repro.telemetry import registry as _telemetry
 
 
 def _resolve(explicit, default):
     return default if explicit is None else explicit
+
+
+def _register_replay_probe(table):
+    """Export replay occupancy as snapshot-time gauges (no-op while
+    telemetry is disabled): ``replay/size``, ``replay/inserts``, … plus
+    ``replay/shard_i/<stat>`` per shard when the table is a
+    ``ShardedReplay`` (its ``stats()`` carries a ``per_shard`` list)."""
+    stats_fn = getattr(table, "stats", None)
+    if callable(stats_fn):
+        def probe_fn():
+            out = {}
+            for k, v in stats_fn().items():
+                if k == "per_shard":
+                    for i, shard_stats in enumerate(v):
+                        for sk, sv in shard_stats.items():
+                            if sk != "name":
+                                out[f"shard_{i}/{sk}"] = sv
+                else:
+                    out[k] = v
+            return out
+    else:
+        def probe_fn():
+            return {"size": table.size()}
+    _telemetry.probe("replay", probe_fn)
 
 
 def _effective_shards(options, num_replay_shards):
@@ -114,7 +141,8 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                num_replay_shards: Optional[int] = None,
                num_envs: Optional[int] = None,
                num_learner_replicas: Optional[int] = None,
-               learner_average_period: Optional[int] = None) -> Agent:
+               learner_average_period: Optional[int] = None,
+               telemetry: Optional[bool] = None) -> Agent:
     """Synchronous single-process agent: actor and learner in lockstep.
 
     Sharded replay is honoured here too; prefetching is not — the lockstep
@@ -129,6 +157,10 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
     ``learner_average_period`` per-replica steps.
     """
     options = builder.options
+    # (Re)configure the process registry BEFORE any component construction:
+    # learners/engines/tables register their metrics and probes in __init__.
+    _telemetry.configure(enabled=_resolve(telemetry, options.telemetry),
+                         node="local")
     replicas, multi = _effective_replicas(options, num_learner_replicas)
     period = _resolve(learner_average_period,
                       options.learner_average_period)
@@ -136,6 +168,7 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                   if multi else _effective_shards(options, num_replay_shards))
     num_envs = _resolve(num_envs, options.num_envs_per_actor)
     table = make_replay_shards(builder.make_replay, num_shards)
+    _register_replay_probe(table)
     shard_tables = None
     if multi:
         replica_learners, _, shard_tables = _make_replica_learners(
@@ -224,7 +257,13 @@ class _ActorWorker:
 
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None,
-                 num_envs: int = 1, inference=None):
+                 num_envs: int = 1, inference=None, telemetry=None):
+        # FIRST: in a spawn child this configures the process registry, so
+        # everything constructed below (actors, engines, courier clients)
+        # records into it.  Under the local launcher the parent already
+        # configured this process and install() is a no-op.
+        self._telemetry_pusher = (telemetry.install()
+                                  if telemetry is not None else None)
         builder = _builder_of(builder)
         options = builder.options
         num_envs = max(int(num_envs), 1)
@@ -264,8 +303,12 @@ class _ActorWorker:
         self._stop = threading.Event()
 
     def run(self):
-        self.loop.run(num_episodes=self.max_episodes,
-                      should_stop=self._stop.is_set)
+        try:
+            self.loop.run(num_episodes=self.max_episodes,
+                          should_stop=self._stop.is_set)
+        finally:
+            if self._telemetry_pusher is not None:
+                self._telemetry_pusher.stop()   # final push to the hub
 
     def stop(self):
         self._stop.set()
@@ -293,7 +336,10 @@ class _EvaluatorWorker:
     pulls weights and logs episode returns against learner steps."""
 
     def __init__(self, env_factory, builder, variable_source, counter,
-                 seed: int, returns_log=None, period_s: float = 1.0):
+                 seed: int, returns_log=None, period_s: float = 1.0,
+                 telemetry=None):
+        self._telemetry_pusher = (telemetry.install()
+                                  if telemetry is not None else None)
         builder = _builder_of(builder)
         self.env = env_factory(seed)
         client = VariableClient(variable_source, update_period=1)
@@ -307,12 +353,16 @@ class _EvaluatorWorker:
         self._stop = threading.Event()
 
     def run(self):
-        while not self._stop.is_set():
-            result = self.loop.run_episode()
-            self.returns.append(result["episode_return"])
-            if self._log is not None:
-                self._log.append(result["episode_return"])
-            self._stop.wait(self.period_s)
+        try:
+            while not self._stop.is_set():
+                result = self.loop.run_episode()
+                self.returns.append(result["episode_return"])
+                if self._log is not None:
+                    self._log.append(result["episode_return"])
+                self._stop.wait(self.period_s)
+        finally:
+            if self._telemetry_pusher is not None:
+                self._telemetry_pusher.stop()   # final push to the hub
 
     def stop(self):
         self._stop.set()
@@ -322,7 +372,8 @@ class DistributedAgent:
     """Handle onto a launched distributed program."""
 
     def __init__(self, program, launcher, learner, table, counter,
-                 datasets=(), eval_log=None, inference_server=None):
+                 datasets=(), eval_log=None, inference_server=None,
+                 telemetry_hub=None, telemetry_pusher=None):
         self.program = program
         self.launcher = launcher
         self.learner = learner
@@ -331,6 +382,8 @@ class DistributedAgent:
         self.datasets = [d for d in datasets if d is not None]
         self.eval_log = eval_log
         self.inference_server = inference_server
+        self.telemetry_hub = telemetry_hub
+        self._telemetry_pusher = telemetry_pusher
 
     def evaluator_returns(self) -> List[float]:
         """Episode returns reported by the evaluator node (works for both
@@ -365,6 +418,17 @@ class DistributedAgent:
             # real worker errors still propagate above.
             import sys
             print(f"[distributed] warning: {e}", file=sys.stderr)
+        # After join: the final parent push captures the services' end-of-run
+        # state (replay tables and courier servers are parent-resident).
+        # Worker processes pushed their own final snapshots on the way out.
+        if self._telemetry_pusher is not None:
+            self._telemetry_pusher.stop()
+
+    def telemetry_snapshot(self):
+        """Merged run-wide telemetry (None when telemetry is off).  Most
+        informative AFTER ``stop()``, once every node's final push landed."""
+        return (self.telemetry_hub.snapshot()
+                if self.telemetry_hub is not None else None)
 
 
 def make_distributed_agent(builder: AgentBuilder, env_factory,
@@ -382,7 +446,10 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            inference_max_batch_size: Optional[int] = None,
                            inference_max_wait_ms: float = 2.0,
                            num_learner_replicas: Optional[int] = None,
-                           learner_average_period: Optional[int] = None) -> DistributedAgent:
+                           learner_average_period: Optional[int] = None,
+                           telemetry: Optional[bool] = None,
+                           telemetry_push_period_s: Optional[float] = None,
+                           telemetry_jsonl: Optional[str] = None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
 
@@ -417,6 +484,18 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
     options = builder.options
+    # Telemetry first: every component constructed below registers its
+    # metrics/probes against the (re)configured process registry.  The
+    # parent process is node "services" — under the multiprocess launcher
+    # all service nodes (replay, param server, inference, courier servers)
+    # are parent-resident, so its registry carries their metrics; under the
+    # local launcher it carries the whole run.
+    telemetry_on = _resolve(telemetry, options.telemetry)
+    push_period = _resolve(telemetry_push_period_s,
+                           options.telemetry_push_period_s)
+    _telemetry.configure(enabled=telemetry_on, node="services")
+    metrics_hub = MetricsHub(jsonl_path=telemetry_jsonl) \
+        if telemetry_on else None
     replicas, multi = _effective_replicas(options, num_learner_replicas)
     period = _resolve(learner_average_period,
                       options.learner_average_period)
@@ -430,6 +509,7 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                          f"got {inference_mode!r}")
 
     table = make_replay_shards(builder.make_replay, num_shards)
+    _register_replay_probe(table)
     datasets: List = []
     param_server = None
     replica_workers: List[LearnerReplicaWorker] = []
@@ -513,6 +593,18 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     counter_handle = program.add_node(
         "counter", Counter, role="service",
         interface=("increment", "get_counts"))
+    # The hub is an ordinary service node: worker processes push snapshots
+    # to it over the same courier plumbing as every other edge.  Added
+    # before the worker nodes so launchers that pickle workers have a
+    # courier server bound to it by then (Handle → RemoteHandle).
+    hub_handle = None
+    telemetry_pusher = None
+    if metrics_hub is not None:
+        hub_handle = program.add_node(
+            "telemetry/hub", lambda: metrics_hub, role="service",
+            interface=HUB_INTERFACE)
+        telemetry_pusher = MetricsPusher(metrics_hub, "services",
+                                         push_period).start()
     # replay placement: one service node per shard (independently
     # addressable — what a multi-host launcher would schedule onto separate
     # replay servers), plus the routing front-end the adders talk to.
@@ -545,20 +637,30 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
             "inference", lambda: inference_server, role="service",
             interface=getattr(inference_server, "INTERFACE",
                               INFERENCE_INTERFACE))
+    actor_telemetry = None
+    if hub_handle is not None:
+        actor_telemetry = Replica(
+            lambda i: WorkerTelemetry(hub_handle, f"actor/{i}", push_period))
     program.add_node(
         "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
         counter_handle, replay_handle,
         Replica(lambda i: seed + 1000 * (i + 1)),
         role="worker", num_replicas=num_actors,
-        num_envs=num_envs, inference=inference_handle)
+        num_envs=num_envs, inference=inference_handle,
+        telemetry=actor_telemetry)
     eval_log_handle = None
     if with_evaluator:
         eval_log_handle = program.add_node(
             "eval_log", ReturnsLog, role="service",
             interface=("append", "items"))
+        eval_telemetry = None
+        if hub_handle is not None:
+            eval_telemetry = WorkerTelemetry(hub_handle, "evaluator",
+                                             push_period)
         program.add_node("evaluator", _EvaluatorWorker, env_factory,
                          actor_builder, learner_handle, counter_handle,
-                         seed + 999_999, eval_log_handle, role="worker")
+                         seed + 999_999, eval_log_handle, role="worker",
+                         telemetry=eval_telemetry)
 
     launched = launcher_cls(program).launch()
     agent = DistributedAgent(program, launched, learner, table,
@@ -566,7 +668,9 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                              datasets=datasets,
                              eval_log=(program.resolve("eval_log")
                                        if with_evaluator else None),
-                             inference_server=inference_server)
+                             inference_server=inference_server,
+                             telemetry_hub=metrics_hub,
+                             telemetry_pusher=telemetry_pusher)
     if with_evaluator and program.node("evaluator").placement != "process":
         agent.evaluator = program.resolve("evaluator")
     return agent

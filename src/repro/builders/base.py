@@ -63,6 +63,12 @@ class BuilderOptions:
     learner_average_period: per-replica SGD steps between parameter-
         averaging rounds (params, target params, optimizer state, and step
         counters are all element-wise averaged).
+    telemetry: enable ``repro.telemetry`` for this agent's runs — every
+        process records RPC latencies, queue waits, block times etc. into
+        its ``MetricRegistry`` and pushes snapshots to a run-wide
+        ``MetricsHub``.  Off by default: disabled metrics are no-op nulls.
+    telemetry_push_period_s: seconds between a worker's snapshot pushes to
+        the hub.
     """
 
     variable_update_period: int = 10
@@ -76,6 +82,8 @@ class BuilderOptions:
     inference: str = "local"
     num_learner_replicas: int = 1
     learner_average_period: int = 50
+    telemetry: bool = False
+    telemetry_push_period_s: float = 0.5
 
     def __post_init__(self):
         if self.variable_update_period < 1:
@@ -114,6 +122,10 @@ class BuilderOptions:
             raise ValueError(
                 f"learner_average_period must be >= 1, got "
                 f"{self.learner_average_period}")
+        if self.telemetry_push_period_s <= 0:
+            raise ValueError(
+                f"telemetry_push_period_s must be > 0, got "
+                f"{self.telemetry_push_period_s}")
 
 
 class AgentBuilder(abc.ABC):

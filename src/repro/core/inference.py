@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.actors import STEP_MOD, _batched_policy
 from repro.core.variable import VariableClient
+from repro.telemetry import registry as _telemetry
 
 # The RPC surface a Program node wrapping this server should declare.
 INFERENCE_INTERFACE = ("select_action", "stats")
@@ -67,7 +68,7 @@ def policy_is_feed_forward(policy: Callable) -> bool:
 
 
 class _Request:
-    __slots__ = ("payload", "rows", "event", "result", "error")
+    __slots__ = ("payload", "rows", "event", "result", "error", "t0")
 
     def __init__(self, payload: Any, rows: int):
         self.payload = payload
@@ -75,6 +76,7 @@ class _Request:
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
         self.error: Optional[BaseException] = None
+        self.t0: Optional[float] = None   # submit time (telemetry only)
 
 
 class _BatchingServer:
@@ -99,6 +101,13 @@ class _BatchingServer:
         self._pending: List[_Request] = []
         self._stopped = False
         self._stats: Dict[str, Any] = {"requests": 0, "rows": 0, "batches": 0}
+        # Null (falsy) metrics when telemetry is off — the hot paths below
+        # guard their clock reads on truthiness.
+        self._m_queue_wait = _telemetry.histogram("inference/queue_wait_ms")
+        self._m_batch_rows = _telemetry.histogram("inference/batch_rows")
+        self._m_batch_occupancy = _telemetry.histogram(
+            "inference/batch_occupancy")
+        _telemetry.probe("inference/server", self.stats)
         self._thread = threading.Thread(target=self._batch_loop,
                                         name="inference_server",
                                         daemon=True)
@@ -115,6 +124,8 @@ class _BatchingServer:
                 f"request of {rows} rows exceeds max_batch_size="
                 f"{self._max_batch}")
         request = _Request(payload, rows)
+        if self._m_queue_wait:
+            request.t0 = time.monotonic()
         with self._cond:
             if self._stopped:
                 raise CourierClosed("inference server stopped")
@@ -172,6 +183,15 @@ class _BatchingServer:
                 self._cond.wait(remaining)
 
     def _run_batch(self, batch: List[_Request]):
+        if self._m_queue_wait:
+            now = time.monotonic()
+            rows = 0
+            for request in batch:
+                rows += request.rows
+                if request.t0 is not None:
+                    self._m_queue_wait.observe((now - request.t0) * 1000.0)
+            self._m_batch_rows.observe(rows)
+            self._m_batch_occupancy.observe(rows / self._max_batch)
         try:
             results, extra = self._execute(batch)
             with self._cond:

@@ -4,10 +4,20 @@ loops, learners, evaluators)."""
 from __future__ import annotations
 
 import csv
+import numbers
 import os
 import threading
 import time
 from typing import Any, Dict, List, Optional
+
+
+def _format_value(v: Any) -> str:
+    """``:.3f`` for any non-integral real number — including numpy float
+    scalars, which are not ``float`` instances and would otherwise print as
+    raw reprs like ``0.12300000339746475``."""
+    if isinstance(v, numbers.Real) and not isinstance(v, numbers.Integral):
+        return f"{float(v):.3f}"
+    return str(v)
 
 
 class TerminalLogger:
@@ -21,7 +31,7 @@ class TerminalLogger:
         if now - self._last < self.every_s:
             return
         self._last = now
-        items = ", ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+        items = ", ".join(f"{k}={_format_value(v)}"
                           for k, v in sorted(values.items()))
         print(f"[{self.label}] {items}", flush=True)
 
@@ -43,7 +53,13 @@ class CSVLogger:
                     self._fieldnames = sorted(values)
                 else:
                     with open(self.path) as f:
-                        self._fieldnames = next(csv.reader(f))
+                        try:
+                            self._fieldnames = next(csv.reader(f))
+                        except StopIteration:
+                            # existing but EMPTY file (e.g. created by
+                            # ``touch`` or a crashed run): treat as new
+                            self._fieldnames = sorted(values)
+                            new = True
             with open(self.path, "a", newline="") as f:
                 w = csv.DictWriter(f, self._fieldnames, extrasaction="ignore")
                 if new:

@@ -55,7 +55,8 @@ class EnvironmentLoop:
     def run_episode(self) -> Dict[str, Any]:
         episode_return = 0.0
         episode_steps = 0
-        start = time.time()
+        # monotonic: wall-clock adjustments must not yield negative rates
+        start = time.monotonic()
 
         # Make an initial observation.
         step = self._environment.reset()
@@ -82,7 +83,8 @@ class EnvironmentLoop:
         result = {
             "episode_return": episode_return,
             "episode_length": episode_steps,
-            "steps_per_second": episode_steps / max(time.time() - start, 1e-9),
+            "steps_per_second": episode_steps / max(
+                time.monotonic() - start, 1e-9),
             **counts,
         }
         if self._logger:
@@ -153,7 +155,8 @@ class VectorizedEnvironmentLoop:
         self._ts = None
         self._ep_return = [0.0] * vector_env.num_envs
         self._ep_steps = [0] * vector_env.num_envs
-        self._ep_start = [time.time()] * vector_env.num_envs
+        # monotonic: wall-clock adjustments must not yield negative rates
+        self._ep_start = [time.monotonic()] * vector_env.num_envs
         self._ticks = 0
 
     def run(self, num_episodes: Optional[int] = None,
@@ -167,7 +170,7 @@ class VectorizedEnvironmentLoop:
 
         if self._ts is None:   # first call only; later calls resume
             self._ts = self._environment.reset()
-            now = time.time()
+            now = time.monotonic()
             for i in range(num_envs):
                 self._actor.observe_first(split_timestep(self._ts, i),
                                           env_id=i)
@@ -191,7 +194,7 @@ class VectorizedEnvironmentLoop:
                     # auto-reset boundary: a fresh episode starts for env i
                     self._actor.observe_first(ts_i, env_id=i)
                     self._ep_return[i], self._ep_steps[i] = 0.0, 0
-                    self._ep_start[i] = time.time()
+                    self._ep_start[i] = time.monotonic()
                     continue
                 self._actor.observe(actions[i], ts_i, env_id=i)
                 self._ep_return[i] += ts_i.reward
@@ -205,7 +208,7 @@ class VectorizedEnvironmentLoop:
                         "episode_return": self._ep_return[i],
                         "episode_length": self._ep_steps[i],
                         "steps_per_second": self._ep_steps[i] / max(
-                            time.time() - self._ep_start[i], 1e-9),
+                            time.monotonic() - self._ep_start[i], 1e-9),
                         "env_id": i,
                         **counts,
                     }

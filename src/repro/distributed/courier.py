@@ -32,8 +32,11 @@ import secrets
 import socket
 import struct
 import threading
+import time
 import traceback
 from typing import Any, Optional, Sequence, Tuple
+
+from repro.telemetry import registry as _telemetry
 
 _LEN = struct.Struct(">I")
 _HOST = "127.0.0.1"
@@ -67,9 +70,11 @@ def picklable_error(e: BaseException) -> BaseException:
                            f"{traceback.format_exc()}")
 
 
-def _send_frame(sock: socket.socket, obj: Any):
+def _send_frame(sock: socket.socket, obj: Any) -> int:
+    """Send one frame; returns the payload size in bytes (for telemetry)."""
     payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     sock.sendall(_LEN.pack(len(payload)) + payload)
+    return len(payload)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -83,9 +88,32 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return buf
 
 
-def _recv_frame(sock: socket.socket) -> Any:
+def _recv_frame(sock: socket.socket) -> Tuple[Any, int]:
+    """Receive one frame; returns ``(obj, payload_bytes)``."""
     (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
-    return pickle.loads(_recv_exact(sock, length))
+    return pickle.loads(_recv_exact(sock, length)), length
+
+
+def _rpc_metrics(cache: dict, side: str, name: str, method: str):
+    """Lazy per-method RPC metrics: ``(latency_ms hist, bytes_sent counter,
+    bytes_recv counter)``, or None while telemetry is disabled.
+
+    Checked at CALL time, not construction time, because handles unpickle
+    in spawn children *before* ``WorkerTelemetry.install()`` configures the
+    child's registry.  Cached per method after the first enabled call; the
+    benign dict race under concurrent serve threads at worst recreates the
+    same tuple.
+    """
+    metrics = cache.get(method)
+    if metrics is None:
+        if not _telemetry.enabled():
+            return None
+        base = f"courier/{side}/{name or 'anon'}/{method}"
+        metrics = (_telemetry.histogram(f"{base}/latency_ms"),
+                   _telemetry.counter(f"{base}/bytes_sent"),
+                   _telemetry.counter(f"{base}/bytes_recv"))
+        cache[method] = metrics
+    return metrics
 
 
 class Server:
@@ -112,6 +140,7 @@ class Server:
         self._accept_thread: Optional[threading.Thread] = None
         self._conns = set()
         self._conns_lock = threading.Lock()
+        self._rpc_metrics: dict = {}
 
     def start(self) -> "Server":
         self._accept_thread = threading.Thread(
@@ -154,21 +183,29 @@ class Server:
                 return
             while not self._stopped.is_set():
                 try:
-                    method, args, kwargs = _recv_frame(conn)
+                    (method, args, kwargs), bytes_in = _recv_frame(conn)
                 except (CourierClosed, OSError, EOFError):
                     return
+                metrics = _rpc_metrics(self._rpc_metrics, "server",
+                                       self.name, method)
+                t0 = time.monotonic() if metrics else 0.0
                 response = self._dispatch(method, args, kwargs)
                 try:
-                    _send_frame(conn, response)
+                    bytes_out = _send_frame(conn, response)
                 except OSError:
                     return
                 except Exception as e:
                     # the RESULT failed to pickle (dumps happens before any
                     # bytes hit the wire): answer with an error frame
                     # instead of silently killing the connection.
-                    _send_frame(conn, ("error", RemoteError(
+                    bytes_out = _send_frame(conn, ("error", RemoteError(
                         f"response of {self.name!r}.{method} could not be "
                         f"pickled: {type(e).__name__}: {e}")))
+                if metrics:
+                    latency, sent, received = metrics
+                    latency.observe((time.monotonic() - t0) * 1000.0)
+                    sent.inc(bytes_out)
+                    received.inc(bytes_in)
         except OSError:
             return
         finally:
@@ -229,6 +266,7 @@ class RemoteHandle:
         self._authkey = authkey
         self._sock: Optional[socket.socket] = None
         self._lock = threading.Lock()
+        self._rpc_metrics: dict = {}
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -267,6 +305,9 @@ class RemoteHandle:
             self._sock = None
 
     def call(self, method: str, *args, **kwargs):
+        metrics = _rpc_metrics(self._rpc_metrics, "client",
+                               self._name, method)
+        t0 = time.monotonic() if metrics else 0.0
         with self._lock:
             # A stale cached socket may fail on SEND: reconnect once and
             # retransmit — the request never reached the server.  After a
@@ -279,18 +320,24 @@ class RemoteHandle:
                 if fresh:
                     self._sock = self._connect()
                 try:
-                    _send_frame(self._sock, (method, args, kwargs))
+                    bytes_out = _send_frame(self._sock,
+                                            (method, args, kwargs))
                 except (ConnectionError, OSError):
                     self._drop_socket()
                     if fresh or attempt:
                         raise
                     continue
                 try:
-                    status, payload = _recv_frame(self._sock)
+                    (status, payload), bytes_in = _recv_frame(self._sock)
                 except (CourierClosed, ConnectionError, OSError):
                     self._drop_socket()
                     raise
                 break
+        if metrics:
+            latency, sent, received = metrics
+            latency.observe((time.monotonic() - t0) * 1000.0)
+            sent.inc(bytes_out)
+            received.inc(bytes_in)
         if status == "error":
             raise payload
         return payload

@@ -73,6 +73,16 @@ class ExperimentConfig:
         single-learner path at N=1 (the parity the test net proves).
     learner_average_period: per-replica SGD steps between parameter-
         averaging rounds (None = defer to the builder's options).
+    telemetry: enable the ``repro.telemetry`` layer (None = defer to the
+        builder's options).  When on, every worker process records hot-path
+        metrics (courier RPC latency/bytes, inference queue-wait and batch
+        occupancy, replay block times and occupancy, barrier waits) and
+        pushes periodic snapshots to a run-wide ``MetricsHub``; the merged
+        snapshot is returned in ``ExperimentResult.extras["telemetry"]``.
+    telemetry_push_period_s: seconds between worker snapshot pushes (None =
+        defer to the builder's options).
+    telemetry_jsonl: if set, the hub appends every received snapshot to
+        this JSONL file (one ``{node, time, metrics}`` record per push).
     """
 
     builder_factory: BuilderFactory
@@ -94,6 +104,9 @@ class ExperimentConfig:
     inference_max_wait_ms: float = 2.0
     num_learner_replicas: Optional[int] = None
     learner_average_period: Optional[int] = None
+    telemetry: Optional[bool] = None
+    telemetry_push_period_s: Optional[float] = None
+    telemetry_jsonl: Optional[str] = None
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -136,6 +149,10 @@ class ExperimentConfig:
                 and self.learner_average_period < 1:
             raise ValueError(f"learner_average_period must be >= 1, "
                              f"got {self.learner_average_period}")
+        if self.telemetry_push_period_s is not None \
+                and self.telemetry_push_period_s <= 0:
+            raise ValueError(f"telemetry_push_period_s must be > 0, "
+                             f"got {self.telemetry_push_period_s}")
 
 
 @dataclasses.dataclass

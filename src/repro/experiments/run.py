@@ -19,6 +19,8 @@ from repro.agents.builders import make_agent, make_distributed_agent
 from repro.core import (Counter, EnvironmentLoop, VariableClient,
                         make_environment_spec)
 from repro.experiments.config import ExperimentConfig, ExperimentResult
+from repro.telemetry import MetricsHub
+from repro.telemetry import registry as _telemetry
 
 _EVAL_SEED_OFFSET = 1_000_003
 
@@ -66,7 +68,12 @@ def run_experiment(config: ExperimentConfig,
                        num_replay_shards=config.num_replay_shards,
                        num_envs=num_envs,
                        num_learner_replicas=config.num_learner_replicas,
-                       learner_average_period=config.learner_average_period)
+                       learner_average_period=config.learner_average_period,
+                       telemetry=config.telemetry)
+    # Single-process telemetry: no pusher thread needed — the whole run
+    # lives in this process, so one final push at the end captures it all.
+    telemetry_hub = (MetricsHub(jsonl_path=config.telemetry_jsonl)
+                     if _telemetry.enabled() else None)
     counter = Counter()
     logger = (config.logger_factory("train")
               if config.logger_factory else None)
@@ -138,6 +145,10 @@ def run_experiment(config: ExperimentConfig,
     learner_stats = getattr(agent.learner, "stats", None)
     if callable(learner_stats):   # MultiLearner: per-replica steps + rounds
         extras["learners"] = learner_stats()
+    if telemetry_hub is not None:
+        telemetry_hub.push(_telemetry.node_name(), _telemetry.snapshot())
+        telemetry_hub.stop()
+        extras["telemetry"] = telemetry_hub.snapshot()
     return ExperimentResult(
         train_returns=returns, actor_steps=steps, walltime=wall,
         eval_returns=evals, counts=counter.get_counts(),
@@ -177,7 +188,11 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   num_learner_replicas=(
                                       config.num_learner_replicas),
                                   learner_average_period=(
-                                      config.learner_average_period))
+                                      config.learner_average_period),
+                                  telemetry=config.telemetry,
+                                  telemetry_push_period_s=(
+                                      config.telemetry_push_period_s),
+                                  telemetry_jsonl=config.telemetry_jsonl)
     checkpointer = _make_checkpointer(config)
     t0 = time.time()
     try:
@@ -209,6 +224,12 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
             extras["evaluator_returns"] = dist.evaluator_returns()
     finally:
         dist.stop()
+    # After stop(): worker processes pushed their final snapshots during
+    # teardown and the parent pusher flushed post-join, so the merged view
+    # covers every node's end-of-run state.
+    telemetry_snapshot = dist.telemetry_snapshot()
+    if telemetry_snapshot is not None:
+        extras["telemetry"] = telemetry_snapshot
 
     total_steps = int(counts.get("actor_steps", 0))
     evals = ([(total_steps, _evaluate(config, builder, dist.learner))]

@@ -37,11 +37,14 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.telemetry import registry as _telemetry
 
 # The declared RPC surface of the parameter-server node (what a multi-host
 # backend would let remote replicas call).
@@ -105,6 +108,11 @@ class ParameterServer:
         self._merged: Any = None
         self._rounds = 0
         self._stopped = False
+        # Lazy per-replica barrier-wait histograms: replicas first call
+        # ``sync`` from their own worker threads/processes, well after the
+        # run entrypoint configured telemetry.
+        self._m_barrier: Dict[int, Any] = {}
+        _telemetry.probe("learner/param_server", self.stats)
 
     @property
     def merged(self):
@@ -140,6 +148,17 @@ class ParameterServer:
             raise ValueError(
                 f"replica_id must be in [0, {self.num_replicas}), "
                 f"got {replica_id}")
+        metric = self._m_barrier.get(replica_id)
+        if metric is None and _telemetry.enabled():
+            metric = self._m_barrier[replica_id] = _telemetry.histogram(
+                f"learner/param_server/replica_{replica_id}/barrier_wait_ms")
+        t0 = time.monotonic() if metric else 0.0
+        result = self._sync(replica_id, state)
+        if metric:
+            metric.observe((time.monotonic() - t0) * 1000.0)
+        return result
+
+    def _sync(self, replica_id: int, state):
         with self._cond:
             if self._stopped:
                 return None

@@ -34,6 +34,7 @@ from repro.core.actors import STEP_MOD
 from repro.models.config import ArchConfig
 from repro.policies import network
 from repro.policies.cache import KVCachePool
+from repro.telemetry import registry as _telemetry
 
 
 def _bucket(n: int) -> int:
@@ -62,7 +63,10 @@ class PolicyEngine:
         self._last_params = None
         self._stats = {"prefill_rows": 0, "decode_rows": 0,
                        "prefill_batches": 0, "decode_batches": 0,
-                       "cache_invalidations": 0}
+                       "cache_invalidations": 0, "stale_reprefills": 0}
+        # Exported as gauges at snapshot time (no-op when telemetry is off);
+        # covers slot utilization, prefill/decode ratio, re-prefill counts.
+        _telemetry.probe("inference/engine", self.stats)
 
         eps = self.epsilon
 
@@ -126,6 +130,8 @@ class PolicyEngine:
                     slot = self.pool.acquire(keys[i])
                 else:
                     # episode restart or stale cache: recycle in place
+                    if slot.generation != generation:
+                        self._stats["stale_reprefills"] += 1
                     self.pool.reset_slot(slot)
                 prefill_rows.append(i)
             slots.append(slot)
@@ -208,4 +214,7 @@ class PolicyEngine:
         s = dict(self._stats)
         s.update({f"pool_{k}": v for k, v in self.pool.stats.items()})
         s["pool_held_slots"] = self.pool.held()
+        s["pool_utilization"] = self.pool.held() / max(self.pool.num_slots, 1)
+        s["prefill_decode_ratio"] = (s["prefill_rows"]
+                                     / max(s["decode_rows"], 1))
         return s

@@ -17,6 +17,7 @@ import numpy as np
 from repro.replay.rate_limiter import (RateLimiter, RateLimiterTimeout,
                                        MinSize)
 from repro.replay.selectors import Selector, Uniform
+from repro.telemetry import registry as _telemetry
 
 
 class Item:
@@ -44,11 +45,34 @@ class Table:
         # O(n) per operation at full capacity.
         self._order: "OrderedDict[int, None]" = OrderedDict()
         self._next_key = 0
+        # Block-time metrics are created on FIRST use, not here:
+        # ``ShardedReplay.from_factory`` renames its shard tables after
+        # construction, and the metric name must carry the final name.
+        self._m_insert_block = None
+        self._m_sample_block = None
+
+    def _block_metrics(self):
+        if self._m_insert_block is None:
+            # "replay"/"replay/shard_i" names already carry the component
+            # prefix; others ("queue", "demos") get it prepended.
+            base = (self.name if self.name.split("/")[0] == "replay"
+                    else f"replay/{self.name}")
+            self._m_insert_block = _telemetry.histogram(
+                f"{base}/insert_block_ms")
+            self._m_sample_block = _telemetry.histogram(
+                f"{base}/sample_block_ms")
+        return self._m_insert_block, self._m_sample_block
 
     # ------------------------------------------------------------ insert
     def insert(self, data: Any, priority: float = 1.0,
                timeout: Optional[float] = None) -> int:
-        self.rate_limiter.await_can_insert(timeout)
+        m_insert, _ = self._block_metrics()
+        if m_insert:
+            t0 = time.monotonic()
+            self.rate_limiter.await_can_insert(timeout)
+            m_insert.observe((time.monotonic() - t0) * 1000.0)
+        else:
+            self.rate_limiter.await_can_insert(timeout)
         with self._lock:
             key = self._next_key
             self._next_key += 1
@@ -66,12 +90,18 @@ class Table:
                timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
         """Returns [(item, importance_weight_probability), ...]."""
         out = []
+        _, m_sample = self._block_metrics()
         deadline = None if timeout is None else time.time() + timeout
         for _ in range(batch_size):
             while True:
                 remaining = (None if deadline is None
                              else max(deadline - time.time(), 0.0))
-                self.rate_limiter.await_can_sample(remaining)
+                if m_sample:
+                    t0 = time.monotonic()
+                    self.rate_limiter.await_can_sample(remaining)
+                    m_sample.observe((time.monotonic() - t0) * 1000.0)
+                else:
+                    self.rate_limiter.await_can_sample(remaining)
                 with self._lock:
                     try:
                         key, prob = self.selector.sample()
