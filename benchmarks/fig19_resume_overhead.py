@@ -1,0 +1,136 @@
+"""Fig 19: exact-resume checkpoint overhead — run-wide snapshot write and
+restore latency as the replay table grows.
+
+A ``RunCheckpointer`` save is dominated by pickling replay *contents*
+(items + selector internals); the learner npz is a constant few hundred
+KB.  This figure prices one save+restore round trip at several replay
+fills against the same DQN-on-Catch learner state, reporting latency and
+on-disk size per component — the number a user trades against
+``checkpoint_every`` when tuning resume granularity.
+
+The restore leg also re-verifies the bit-exactness foundation at every
+size: the restored table must continue the EXACT sample stream of the
+original (selector array + RNG round-trip), not merely hold the same
+items.
+
+    python benchmarks/fig19_resume_overhead.py            # full sweep
+    python benchmarks/fig19_resume_overhead.py --smoke    # CI check
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import make_environment_spec
+from repro.envs import Catch
+from repro.replay import MinSize, Prioritized, Table
+from repro.resilience import RunCheckpointer
+
+SIZES = (1_000, 5_000, 20_000)
+SMOKE_SIZES = (500, 2_000)
+# generous: CI hosts are noisy, and the point of the smoke tier is the
+# mechanics (write protocol, manifest, sample-stream parity), not speed
+SMOKE_ROUNDTRIP_CEILING_S = 20.0
+
+
+def _learner_state():
+    spec = make_environment_spec(Catch(seed=0))
+    builder = DQNBuilder(spec, DQNConfig(min_replay_size=10,
+                                         samples_per_insert=0.0,
+                                         batch_size=16, n_step=1), seed=0)
+    learner = builder.make_learner(builder.make_dataset(builder.make_replay()))
+    return learner.state
+
+
+def _make_table(capacity: int) -> Table:
+    # prioritized selector: the sum-tree array is the expensive selector
+    # state, so this is the worst case per item.  Size the tree to the
+    # table (the default 1<<20 would put a constant 16MB in every file
+    # and flatten the scaling curve).
+    return Table("bench", capacity,
+                 Prioritized(priority_exponent=0.6, capacity=capacity,
+                             seed=1),
+                 MinSize(1))
+
+
+def _fill(table: Table, n: int):
+    rng = np.random.RandomState(0)
+    for _ in range(n):
+        transition = (rng.rand(10, 5).astype(np.float32),
+                      int(rng.randint(3)), float(rng.rand()), 1.0,
+                      rng.rand(10, 5).astype(np.float32))
+        table.insert(transition, priority=float(rng.rand()) + 0.1)
+
+
+def _component_bytes(directory: str, step: int) -> dict:
+    sizes = {}
+    for f in os.listdir(directory):
+        if f.endswith(f"_{step}.pkl") or f.endswith(f"_{step}.npz"):
+            sizes[f.split("_")[0]] = os.path.getsize(
+                os.path.join(directory, f))
+    return sizes
+
+
+def measure_one(state, n: int) -> dict:
+    table = _make_table(n + 16)
+    _fill(table, n)
+    directory = tempfile.mkdtemp(prefix="fig19_")
+    try:
+        ck = RunCheckpointer(directory)
+        t0 = time.monotonic()
+        ck.save(n, state, replay=table.state_dict(),
+                counts={"actor_steps": float(n)},
+                meta={"mode": "benchmark"})
+        save_s = time.monotonic() - t0
+        parts = _component_bytes(directory, n)
+
+        t0 = time.monotonic()
+        snapshot = RunCheckpointer(directory).restore(state)
+        restored = _make_table(n + 16)
+        restored.load_state_dict(snapshot.replay)
+        restore_s = time.monotonic() - t0
+
+        # bit-exactness foundation: identical subsequent sample streams
+        for _ in range(5):
+            a = [(it.key, prob) for it, prob in table.sample(4)]
+            b = [(it.key, prob) for it, prob in restored.sample(4)]
+            assert a == b, f"sample stream diverged after restore (n={n})"
+        assert snapshot.counts == {"actor_steps": float(n)}
+        return {"save_s": save_s, "restore_s": restore_s,
+                "replay_mb": parts.get("replay", 0) / 1e6,
+                "learner_mb": parts.get("learner", 0) / 1e6}
+    finally:
+        shutil.rmtree(directory, ignore_errors=True)
+
+
+def main(smoke: bool = False):
+    sizes = SMOKE_SIZES if smoke else SIZES
+    state = _learner_state()
+    results = {}
+    for n in sizes:
+        r = measure_one(state, n)
+        results[n] = r
+        csv_row(f"fig19/replay_{n}/save_ms", round(r["save_s"] * 1000, 1))
+        csv_row(f"fig19/replay_{n}/restore_ms",
+                round(r["restore_s"] * 1000, 1))
+        csv_row(f"fig19/replay_{n}/replay_mb", round(r["replay_mb"], 2))
+        csv_row(f"fig19/replay_{n}/learner_mb", round(r["learner_mb"], 2))
+    if smoke:
+        worst = max(r["save_s"] + r["restore_s"] for r in results.values())
+        assert worst < SMOKE_ROUNDTRIP_CEILING_S, (
+            f"checkpoint round trip took {worst:.1f}s — above the "
+            f"{SMOKE_ROUNDTRIP_CEILING_S}s smoke ceiling")
+        print(f"fig19 smoke OK: worst round trip {worst * 1000:.0f}ms "
+              f"across replay sizes {list(sizes)}")
+    return results
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -59,9 +59,16 @@ echo "[ci] smoke: telemetry overhead (fig18 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig18_telemetry_overhead.py --smoke
 
+echo "[ci] smoke: exact-resume checkpoint overhead (fig19 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig19_resume_overhead.py --smoke
+
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__
 python scripts/smoke_multiprocess.py
+
+echo "[ci] smoke: chaos harness — actor kill + elastic respawn"
+python scripts/smoke_chaos.py
 
 echo "[ci] smoke: DQN on Catch via repro.experiments.run_experiment"
 python - <<'EOF'

@@ -1,0 +1,58 @@
+"""CI smoke: the chaos harness kills an actor mid-run and the elastic
+supervisor absorbs it (repro.resilience).
+
+A seeded ``ChaosPolicy`` hard-kills ``actor/0`` after 150 environment
+steps (``os._exit`` — the same failure surface as an OOM kill); the
+``MultiprocessLauncher`` classifies the death as a crash, respawns the
+replica under its ``RestartPolicy`` budget, and the respawned worker —
+seeing ``REPRO_WORKER_RESTARTS`` — disarms its kill schedule and trains
+to the step target.
+
+A real file (not a stdin heredoc) because the spawn context re-imports
+``__main__`` in every child.
+"""
+import time
+
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.envs import Catch
+from repro.experiments import ExperimentConfig, run_distributed_experiment
+from repro.resilience import ChaosPolicy, RestartPolicy
+
+
+def builder_factory(spec):
+    return DQNBuilder(spec, DQNConfig(min_replay_size=50,
+                                      samples_per_insert=4.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def env_factory(seed):
+    return Catch(seed=seed)
+
+
+def main():
+    t0 = time.time()
+    config = ExperimentConfig(
+        builder_factory=builder_factory,
+        environment_factory=env_factory,
+        seed=0, eval_episodes=0, launcher="multiprocess",
+        restart_policy=RestartPolicy(max_restarts=3),
+        chaos=ChaosPolicy(kill_after_steps=150, kill_targets=("actor/0",),
+                          max_kills=1))
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=1500, timeout_s=180)
+    steps = int(result.counts.get("actor_steps", 0))
+    resilience = result.extras["resilience"]
+    print(f"[ci] chaos smoke: {steps} actor steps, "
+          f"{result.learner_steps} learner steps, "
+          f"restarts {resilience['restarts']}, "
+          f"exit kinds {resilience['exit_kinds']}, "
+          f"{time.time() - t0:.0f}s")
+    assert steps >= 1500, "run never reached the step target through chaos"
+    assert result.learner_steps > 0, "learner never stepped"
+    assert resilience["restarts"].get("actor/0") == 1, (
+        f"the killed actor was not respawned exactly once: {resilience}")
+    assert "crash" in resilience["exit_kinds"]["actor/0"], resilience
+
+
+if __name__ == "__main__":
+    main()

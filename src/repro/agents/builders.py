@@ -206,10 +206,14 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                 return False
             return table.size() >= options.batch_size if consuming else True
 
-    return Agent(actor, learner,
-                 min_observations=options.min_observations,
-                 observations_per_step=options.observations_per_step,
-                 can_step=can_step)
+    agent = Agent(actor, learner,
+                  min_observations=options.min_observations,
+                  observations_per_step=options.observations_per_step,
+                  can_step=can_step)
+    # The table is otherwise internal to assembly; run-wide checkpointing
+    # (repro.resilience) reaches replay contents through the agent.
+    agent.table = table
+    return agent
 
 
 class _DeferredBuilder:
@@ -253,17 +257,30 @@ class _ActorWorker:
     its own adder.  ``inference`` (a handle to an ``InferenceServer``)
     switches policy evaluation to SEED-style RPC — the worker then holds no
     weights and never polls the learner.
+
+    ``chaos`` (a ``repro.resilience.KillSchedule``) wraps the actor so the
+    process hard-kills itself after N environment steps; ``rpc_chaos`` (the
+    run's ``ChaosPolicy``) installs a courier-layer fault injector in this
+    worker's process.  Both are picklable and resolved per replica at
+    assembly time — the chaos acceptance tests drive them.
     """
 
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None,
-                 num_envs: int = 1, inference=None, telemetry=None):
+                 num_envs: int = 1, inference=None, telemetry=None,
+                 chaos=None, rpc_chaos=None):
         # FIRST: in a spawn child this configures the process registry, so
         # everything constructed below (actors, engines, courier clients)
         # records into it.  Under the local launcher the parent already
         # configured this process and install() is a no-op.
         self._telemetry_pusher = (telemetry.install()
                                   if telemetry is not None else None)
+        if rpc_chaos is not None:
+            # Install BEFORE any courier client exists in this process so
+            # every RPC the worker makes passes through the injector.
+            injector = rpc_chaos.rpc_injector()
+            if injector is not None:
+                injector.install()
         builder = _builder_of(builder)
         options = builder.options
         num_envs = max(int(num_envs), 1)
@@ -284,6 +301,9 @@ class _ActorWorker:
             else:
                 actor = builder.make_actor(
                     policy, client, builder.make_adder(table), seed)
+        if chaos is not None:
+            # no-op when the schedule has disarmed (max_kills delivered)
+            actor = chaos.wrap(actor)
         # weight-sync cadence lives in the LOOP (update_period in env steps /
         # ticks); the client fetches on every poke it does receive.  A tick
         # of the vectorized loop covers num_envs transitions, so the tick
@@ -449,7 +469,10 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            learner_average_period: Optional[int] = None,
                            telemetry: Optional[bool] = None,
                            telemetry_push_period_s: Optional[float] = None,
-                           telemetry_jsonl: Optional[str] = None) -> DistributedAgent:
+                           telemetry_jsonl: Optional[str] = None,
+                           restart_policy=None,
+                           chaos=None,
+                           restore=None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
 
@@ -480,9 +503,18 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     per-replica steps; the ``learner`` endpoint keeps serving
     ``get_variables`` unchanged, so actors, evaluators, and checkpoints
     see ONE logical learner.
+
+    ``restart_policy`` (a ``repro.resilience.RestartPolicy``) makes the
+    worker pool elastic: launchers with supervision support respawn dead
+    ``role="worker"`` replicas under it instead of failing the run.
+    ``chaos`` (a ``repro.resilience.ChaosPolicy``) resolves seeded fault
+    schedules per actor replica.  ``restore`` is a pre-launch hook called
+    as ``restore(learner, table, counter)`` once every service exists but
+    before any worker runs — exact-resume state is applied through it.
     """
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
+    program.restart_policy = restart_policy
     options = builder.options
     # Telemetry first: every component constructed below registers its
     # metrics/probes against the (re)configured process registry.  The
@@ -641,13 +673,23 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     if hub_handle is not None:
         actor_telemetry = Replica(
             lambda i: WorkerTelemetry(hub_handle, f"actor/{i}", push_period))
+    actor_chaos = None
+    actor_rpc_chaos = None
+    if chaos is not None and launcher_cls.requires_pickling:
+        # Chaos needs process isolation: a kill schedule hard-exits the
+        # worker's process (under the thread-backed local launcher that
+        # would be the run itself), and RPC faults only exist over the
+        # courier edges that out-of-process placement creates.
+        actor_chaos = Replica(lambda i: chaos.schedule_for(f"actor/{i}"))
+        actor_rpc_chaos = chaos
     program.add_node(
         "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
         counter_handle, replay_handle,
         Replica(lambda i: seed + 1000 * (i + 1)),
         role="worker", num_replicas=num_actors,
         num_envs=num_envs, inference=inference_handle,
-        telemetry=actor_telemetry)
+        telemetry=actor_telemetry,
+        chaos=actor_chaos, rpc_chaos=actor_rpc_chaos)
     eval_log_handle = None
     if with_evaluator:
         eval_log_handle = program.add_node(
@@ -662,6 +704,11 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                          seed + 999_999, eval_log_handle, role="worker",
                          telemetry=eval_telemetry)
 
+    if restore is not None:
+        # Exact-resume: services (learner, replay, counter) exist but no
+        # worker has produced a transition yet — restored state is the
+        # first state anything observes.
+        restore(learner, table, program.resolve("counter"))
     launched = launcher_cls(program).launch()
     agent = DistributedAgent(program, launched, learner, table,
                              program.resolve("counter"),

@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.checkpointer import (Checkpointer,  # noqa: F401
+                                           CheckpointError, fsync_directory)

@@ -1,6 +1,13 @@
 """Pytree checkpointing (npz): learner state + counters persist through
 interruptions; learner walltime is checkpointed alongside the networks so
-timekeeping survives preemption (§4.2)."""
+timekeeping survives preemption (§4.2).
+
+Crash-consistency contract: ``save`` publishes a ``<name>_latest.json``
+manifest (atomic replace + directory fsync) *after* the npz itself is in
+place and *before* garbage collection, so a crash at any point leaves
+``restore()`` pointing at a fully written step — never at a half-collected
+or half-written one.
+"""
 from __future__ import annotations
 
 import json
@@ -12,9 +19,29 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be restored into the given template
+    (leaf count or leaf shape mismatch, or a manifest pointing at a missing
+    file)."""
+
+
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+def fsync_directory(directory: str):
+    """Flush directory metadata (renames) to disk; no-op where unsupported."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 class Checkpointer:
@@ -28,6 +55,9 @@ class Checkpointer:
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"{self.name}_{step}.npz")
 
+    def _manifest_path(self) -> str:
+        return os.path.join(self.directory, f"{self.name}_latest.json")
+
     def save(self, state, step: int, metadata: Optional[Dict] = None):
         arrays, treedef = _flatten(state)
         meta = dict(metadata or {})
@@ -40,12 +70,49 @@ class Checkpointer:
         os.replace(src, self._path(step))
         if os.path.exists(tmp):
             os.unlink(tmp)
+        # Publish the manifest before gc: if we crash mid-collection,
+        # restore() still resolves to this (complete) step rather than
+        # scanning a directory that gc may have half-emptied.
+        self._write_manifest(step)
+        fsync_directory(self.directory)
         self._gc()
+
+    def _write_manifest(self, step: int):
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".json.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"step": step,
+                       "file": os.path.basename(self._path(step))}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._manifest_path())
+
+    def latest_step(self) -> Optional[int]:
+        """The manifest's step if present (crash-safe), else the newest
+        on-disk step, else None."""
+        try:
+            with open(self._manifest_path()) as f:
+                manifest = json.load(f)
+            step = int(manifest["step"])
+        except (OSError, ValueError, KeyError):
+            steps = self.list_steps()
+            return steps[-1] if steps else None
+        if not os.path.exists(self._path(step)):
+            raise CheckpointError(
+                f"manifest {self._manifest_path()} points at step {step} "
+                f"but {self._path(step)} is missing")
+        return step
 
     def _gc(self):
         ckpts = self.list_steps()
-        for step in ckpts[:-self.keep]:
-            os.unlink(self._path(step))
+        keep = ckpts[-self.keep:]
+        latest = None
+        try:
+            latest = self.latest_step()
+        except CheckpointError:
+            pass
+        for step in ckpts:
+            if step not in keep and step != latest:
+                os.unlink(self._path(step))
 
     def list_steps(self):
         steps = []
@@ -58,14 +125,38 @@ class Checkpointer:
         return sorted(steps)
 
     def restore(self, state_template, step: Optional[int] = None):
-        """Returns (state, metadata) or (None, None) if nothing saved."""
-        steps = self.list_steps()
-        if not steps:
-            return None, None
-        step = steps[-1] if step is None else step
-        with np.load(self._path(step), allow_pickle=False) as data:
+        """Returns (state, metadata) or (None, None) if nothing saved.
+
+        Raises ``CheckpointError`` when the checkpoint's leaf count or any
+        leaf's shape does not match ``state_template`` — a clear signal the
+        network/optimizer architecture drifted from the saved run.
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None, None
+        path = self._path(step)
+        if not os.path.exists(path):
+            raise CheckpointError(f"no checkpoint at step {step}: {path}")
+        with np.load(path, allow_pickle=False) as data:
             meta = json.loads(str(data["__meta__"]))
             leaves, treedef = jax.tree_util.tree_flatten(state_template)
-            restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+            saved = sum(1 for k in data.files if k.startswith("leaf_"))
+            if saved != len(leaves):
+                raise CheckpointError(
+                    f"checkpoint {os.path.basename(path)} has {saved} "
+                    f"leaves but the template has {len(leaves)} — the "
+                    "state structure changed since this checkpoint was "
+                    "written")
+            restored = []
+            for i, leaf in enumerate(leaves):
+                arr = data[f"leaf_{i}"]
+                want = np.shape(leaf)
+                if tuple(arr.shape) != tuple(want):
+                    raise CheckpointError(
+                        f"checkpoint {os.path.basename(path)} leaf_{i} has "
+                        f"shape {tuple(arr.shape)} but the template expects "
+                        f"{tuple(want)}")
+                restored.append(arr)
             state = jax.tree_util.tree_unflatten(treedef, restored)
         return state, meta

@@ -124,6 +124,15 @@ class FeedForwardActor(Actor):
     def update(self, wait: bool = False):
         self._client.update(wait)
 
+    def state_dict(self):
+        # _steps is the whole RNG stream: per-step keys are
+        # fold_in(base_key, step), and base_key is rebuilt from the seed.
+        return {"steps": self._steps, "client": self._client.state_dict()}
+
+    def load_state_dict(self, state):
+        self._steps = int(state["steps"])
+        self._client.load_state_dict(state["client"])
+
 
 class RecurrentActor(Actor):
     def __init__(self, policy: PolicyFn, initial_state_fn: Callable[[], Any],
@@ -169,6 +178,16 @@ class RecurrentActor(Actor):
     def update(self, wait: bool = False):
         self._client.update(wait)
 
+    def state_dict(self):
+        # Captured at an episode boundary, so the recurrent core state is
+        # about to be re-initialized by observe_first — only the RNG step
+        # counter and weight-fetch cadence need to survive.
+        return {"steps": self._steps, "client": self._client.state_dict()}
+
+    def load_state_dict(self, state):
+        self._steps = int(state["steps"])
+        self._client.load_state_dict(state["client"])
+
 
 class BatchedFeedForwardActor(Actor):
     """N environments, ONE vmapped+jitted policy dispatch per step.
@@ -213,6 +232,13 @@ class BatchedFeedForwardActor(Actor):
 
     def update(self, wait: bool = False):
         self._client.update(wait)
+
+    def state_dict(self):
+        return {"steps": self._steps, "client": self._client.state_dict()}
+
+    def load_state_dict(self, state):
+        self._steps = int(state["steps"])
+        self._client.load_state_dict(state["client"])
 
 
 class BatchedRecurrentActor(BatchedFeedForwardActor):

@@ -60,3 +60,21 @@ class Agent(Actor):
     @property
     def learner(self) -> Learner:
         return self._learner
+
+    @property
+    def actor(self) -> Actor:
+        return self._actor
+
+    # -- exact resume (repro.resilience) -------------------------------
+    def state_dict(self):
+        # The observation/step counters drive the target-based learner
+        # schedule: restoring them keeps post-resume learner steps on
+        # exactly the same observations as the uninterrupted run.
+        return {"num_observations": self._num_observations,
+                "learner_steps_taken": self._learner_steps_taken,
+                "actor": self._actor.state_dict()}
+
+    def load_state_dict(self, state):
+        self._num_observations = int(state["num_observations"])
+        self._learner_steps_taken = int(state["learner_steps_taken"])
+        self._actor.load_state_dict(state["actor"])

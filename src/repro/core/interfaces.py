@@ -35,6 +35,16 @@ class Actor(abc.ABC):
         """Pull fresh weights / trigger learner steps (agents)."""
         ...
 
+    # -- exact resume (repro.resilience) -------------------------------
+    # Actors carry only small host-side state (RNG step counters); the
+    # default is stateless.  Overrides must round-trip everything that
+    # influences future action draws, captured at an episode boundary.
+    def state_dict(self) -> Dict[str, Any]:
+        return {}
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        pass
+
 
 class Learner(VariableSource, abc.ABC):
     """Consumes batches, runs SGD (§2.2)."""

@@ -28,6 +28,11 @@ class Counter:
         with self._lock:
             return dict(self._counts)
 
+    def set_counts(self, counts: Dict[str, float]):
+        """Replace all totals (exact resume: restored from a checkpoint)."""
+        with self._lock:
+            self._counts = dict(counts)
+
 
 class EnvironmentLoop:
     def __init__(self, environment: Environment, actor: Actor,
@@ -51,6 +56,13 @@ class EnvironmentLoop:
         # Agents keep the default of 1 — update() drives their learner.
         self._update_period = update_period
         self._update_calls = 0
+
+    # -- exact resume (repro.resilience) -------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"update_calls": self._update_calls}
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        self._update_calls = int(state["update_calls"])
 
     def run_episode(self) -> Dict[str, Any]:
         episode_return = 0.0

@@ -54,6 +54,26 @@ class VariableClient:
         self._params = self._source.get_variables(self._names)
         self._fresh = False
 
+    # -- exact resume (repro.resilience) -------------------------------
+    def state_dict(self) -> dict:
+        # Two things must survive: the fetch cadence (_calls % _period
+        # decides WHEN weights refresh) and the cached params themselves —
+        # with update_period > 1 the cache is legitimately STALER than the
+        # learner at checkpoint time, and refetching on resume would hand
+        # the actor fresher weights than the uninterrupted run used.
+        params = self._params
+        if params is not None:
+            import jax
+            import numpy as np
+            params = jax.tree.map(np.asarray, params)
+        return {"calls": self._calls, "params": params,
+                "fresh": self._fresh}
+
+    def load_state_dict(self, state: dict):
+        self._calls = int(state["calls"])
+        self._params = state.get("params")
+        self._fresh = bool(state.get("fresh", False))
+
 
 class VariableServer(VariableSource):
     """Thread-safe holder used by learners to publish weights.

@@ -45,6 +45,31 @@ _DIGEST = "sha256"
 _DIGEST_BYTES = 32
 _AUTH_OK = b"OK"
 
+# Methods safe to re-execute if the RESPONSE is lost: pure reads and
+# latest-wins writes.  For these (and only these) a half-open connection is
+# timed out and the call retried on a fresh socket; everything else keeps
+# the strict no-retry-after-send rule below, because a lost response may
+# mean the server already ran the (non-idempotent) method.
+IDEMPOTENT_METHODS = frozenset({
+    "get_variables", "get_counts", "size", "stats", "select_action",
+    "push", "snapshot", "nodes", "num_pushes", "items",
+})
+# Recv timeout applied per attempt to idempotent calls: bounds how long a
+# half-open connection (peer died without FIN) can stall a retryable read.
+IDEMPOTENT_RECV_TIMEOUT_S = 30.0
+
+# Chaos injection point (see repro.resilience.chaos): when set, consulted
+# client-side before every send — may sleep (delay) or raise
+# ConnectionError (drop).  Faults fire before any bytes hit the wire, so a
+# dropped call is always safe to retry regardless of idempotence.
+_RPC_CHAOS = None
+
+
+def set_rpc_chaos(injector):
+    """Install (or clear, with None) a process-wide RPC fault injector."""
+    global _RPC_CHAOS
+    _RPC_CHAOS = injector
+
 
 class CourierClosed(ConnectionError):
     """The peer closed the connection (server stopped, or vice versa)."""
@@ -267,6 +292,17 @@ class RemoteHandle:
         self._sock: Optional[socket.socket] = None
         self._lock = threading.Lock()
         self._rpc_metrics: dict = {}
+        self._m_retries = None
+
+    def _retries_metric(self):
+        # Lazy like _rpc_metrics: handles unpickle before the child's
+        # telemetry registry is configured.
+        if self._m_retries is None:
+            if not _telemetry.enabled():
+                return None
+            self._m_retries = _telemetry.counter(
+                f"courier/client/{self._name or 'anon'}/retries")
+        return self._m_retries
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -308,14 +344,30 @@ class RemoteHandle:
         metrics = _rpc_metrics(self._rpc_metrics, "client",
                                self._name, method)
         t0 = time.monotonic() if metrics else 0.0
+        idempotent = method in IDEMPOTENT_METHODS
+        max_attempts = 3 if idempotent else 2
+        retries = 0
         with self._lock:
             # A stale cached socket may fail on SEND: reconnect once and
             # retransmit — the request never reached the server.  After a
-            # send went through there is NO retry: the server may already
-            # have executed the call (insert/increment/append are not
-            # idempotent), so a lost response must surface as an error
-            # rather than silently run the method twice.
-            for attempt in (0, 1):
+            # send went through there is NO retry for general methods: the
+            # server may already have executed the call (insert/increment/
+            # append are not idempotent), so a lost response must surface
+            # as an error rather than silently run the method twice.
+            # IDEMPOTENT_METHODS relax this: their recv is bounded by a
+            # timeout (half-open peers) and retried on a fresh connection.
+            for attempt in range(max_attempts):
+                last = attempt == max_attempts - 1
+                try:
+                    if _RPC_CHAOS is not None:
+                        _RPC_CHAOS.before_send()
+                except ConnectionError:
+                    # injected drop: nothing was sent, any call may retry
+                    self._drop_socket()
+                    if last:
+                        raise
+                    retries += 1
+                    continue
                 fresh = self._sock is None
                 if fresh:
                     self._sock = self._connect()
@@ -324,15 +376,27 @@ class RemoteHandle:
                                             (method, args, kwargs))
                 except (ConnectionError, OSError):
                     self._drop_socket()
-                    if fresh or attempt:
+                    if fresh or last:
                         raise
+                    retries += 1
                     continue
+                if idempotent:
+                    self._sock.settimeout(IDEMPOTENT_RECV_TIMEOUT_S)
                 try:
                     (status, payload), bytes_in = _recv_frame(self._sock)
                 except (CourierClosed, ConnectionError, OSError):
                     self._drop_socket()
-                    raise
+                    if not idempotent or last:
+                        raise
+                    retries += 1
+                    continue
+                if idempotent:
+                    self._sock.settimeout(None)
                 break
+        if retries:
+            m_retries = self._retries_metric()
+            if m_retries:
+                m_retries.inc(retries)
         if metrics:
             latency, sent, received = metrics
             latency.observe((time.monotonic() - t0) * 1000.0)

@@ -42,12 +42,16 @@ from __future__ import annotations
 
 import abc
 import pickle
+import sys
 import threading
 import time
 from typing import Dict, List, Optional, Type
 
 from repro.distributed.courier import RemoteHandle, Server
 from repro.distributed.program import Node, Program
+from repro.resilience.chaos import RESTARTS_ENV
+from repro.resilience.supervisor import classify_exit
+from repro.telemetry import registry as _telemetry
 
 
 class WorkerErrors(RuntimeError):
@@ -298,11 +302,18 @@ def _child_error(e: BaseException) -> BaseException:
     return picklable_error(e)
 
 
-def _child_main(node_name, payload, control_pipe, error_queue):
+def _child_main(node_name, payload, control_pipe, error_queue, restarts=0):
     """Entry point of a spawned worker process: rebuild the node from its
     pickled (factory, args, kwargs) — Handles arrive as RemoteHandles — and
-    drive its run loop until done or stopped."""
+    drive its run loop until done or stopped.
+
+    ``restarts`` counts how many times this worker has been respawned by
+    the elastic supervisor; it is published via ``RESTARTS_ENV`` before the
+    node is built so chaos kill schedules can disarm after ``max_kills``.
+    """
+    import os
     import sys
+    os.environ[RESTARTS_ENV] = str(restarts)
     flags = {"stop": False, "user": False}
     try:
         factory, args, kwargs = pickle.loads(payload)
@@ -348,6 +359,25 @@ class MultiprocessLauncher(LauncherBase):
         self._control_pipes: Dict[str, object] = {}
         self._reported: set = set()
         self._monitor_thread: Optional[threading.Thread] = None
+        # --- elastic supervision (repro.resilience) -------------------
+        # When the program carries a RestartPolicy, dead workers are
+        # respawned from their stored spawn payloads instead of failing
+        # the run: deaths are classified (crash/preempted/shutdown),
+        # restarts are budgeted per worker with exponential backoff.
+        self._policy = getattr(program, "restart_policy", None)
+        self._payloads: Dict[str, bytes] = {}
+        self._restarts: Dict[str, int] = {}
+        self._exit_kinds: Dict[str, List[str]] = {}
+        self._respawn_at: Dict[str, float] = {}
+        self._stashed: Dict[str, BaseException] = {}
+        self._m_restarts = None
+
+    def restart_stats(self) -> Dict:
+        """Supervisor bookkeeping: per-worker restart counts and the
+        classification of every death observed."""
+        return {"restarts": dict(self._restarts),
+                "exit_kinds": {k: list(v)
+                               for k, v in self._exit_kinds.items()}}
 
     def launch(self) -> "MultiprocessLauncher":
         try:
@@ -375,15 +405,8 @@ class MultiprocessLauncher(LauncherBase):
                         f"child process: its factory/arguments failed to "
                         f"pickle ({type(e).__name__}: {e}). Use module-level "
                         f"factories and pass services as Handles.") from e
-                parent_end, child_end = self._ctx.Pipe()
-                self._control_pipes[node.name] = parent_end
-                proc = self._ctx.Process(
-                    target=_child_main,
-                    args=(node.name, payload, child_end, self._error_queue),
-                    name=node.name, daemon=True)
-                self.processes[node.name] = proc
-                proc.start()
-                child_end.close()   # parent keeps only its own end
+                self._payloads[node.name] = payload
+                self._spawn(node.name, restarts=0)
         except BaseException:
             # a half-launched program must not leak: children already
             # spawned would keep training against it for the parent's
@@ -396,9 +419,35 @@ class MultiprocessLauncher(LauncherBase):
         self._monitor_thread.start()
         return self
 
+    def _spawn(self, name: str, restarts: int):
+        """Start (or restart) worker ``name`` from its stored payload."""
+        parent_end, child_end = self._ctx.Pipe()
+        old_pipe = self._control_pipes.get(name)
+        self._control_pipes[name] = parent_end
+        if old_pipe is not None:
+            try:
+                old_pipe.close()
+            except OSError:
+                pass
+        proc = self._ctx.Process(
+            target=_child_main,
+            args=(name, self._payloads[name], child_end,
+                  self._error_queue, restarts),
+            name=name, daemon=True)
+        self.processes[name] = proc
+        proc.start()
+        child_end.close()   # parent keeps only its own end
+        # A stop initiated between scheduling and spawning would have
+        # missed this pipe: relay it so the fresh child shuts down too.
+        if self._stop.is_set():
+            try:
+                parent_end.send(("stop", self._user_stopped))
+            except (OSError, ValueError, BrokenPipeError):
+                pass
+
     def _abort_launch(self):
         self.stop()
-        for proc in self.processes.values():
+        for proc in list(self.processes.values()):
             proc.join(timeout=5)
             if proc.is_alive():
                 proc.terminate()
@@ -406,6 +455,14 @@ class MultiprocessLauncher(LauncherBase):
         self._close_servers()
 
     # ------------------------------------------------------------- monitor
+    def _may_restart(self, name: str) -> bool:
+        """Whether worker ``name`` is still inside its restart budget (the
+        exit-kind half of the decision waits for the exit code)."""
+        return (self._policy is not None
+                and not self._stop.is_set()
+                and name in self._payloads
+                and self._restarts.get(name, 0) < self._policy.max_restarts)
+
     def _drain_errors(self):
         import queue as queue_lib
         while True:
@@ -413,35 +470,94 @@ class MultiprocessLauncher(LauncherBase):
                 name, exc = self._error_queue.get_nowait()
             except (queue_lib.Empty, OSError, EOFError):
                 return
+            if self._may_restart(name):
+                # A restart-eligible worker's error is held back until its
+                # death is classified: a restarted crash is logged, not
+                # fatal.  If the supervisor declines the restart the error
+                # surfaces through the normal fail-fast path below.
+                self._stashed[name] = exc
+            else:
+                self._reported.add(name)
+                self._record_error(exc)
+
+    def _restart_metric(self):
+        if self._m_restarts is None:
+            if not _telemetry.enabled():
+                return None
+            self._m_restarts = _telemetry.counter("resilience/restarts")
+        return self._m_restarts
+
+    def _handle_death(self, name: str, proc) -> bool:
+        """Classify a dead worker and either schedule its respawn (True:
+        keep it pending) or surface the failure fail-fast (False)."""
+        kind = classify_exit(proc.exitcode, stopping=self._stop.is_set())
+        self._exit_kinds.setdefault(name, []).append(kind)
+        count = self._restarts.get(name, 0)
+        if (self._policy is not None and name in self._payloads
+                and not self._stop.is_set()
+                and self._policy.should_restart(kind, count)):
+            delay = self._policy.backoff(count)
+            self._restarts[name] = count + 1
+            stashed = self._stashed.pop(name, None)
+            detail = f": {type(stashed).__name__}: {stashed}" if stashed \
+                else ""
+            print(f"[launcher] worker {name!r} {kind} (exit "
+                  f"{proc.exitcode}){detail} — restart "
+                  f"{count + 1}/{self._policy.max_restarts} in "
+                  f"{delay:.2f}s", file=sys.stderr, flush=True)
+            metric = self._restart_metric()
+            if metric:
+                metric.inc()
+                _telemetry.counter(f"resilience/restarts/{name}").inc()
+            self._respawn_at[name] = time.time() + delay
+            return True
+        stashed = self._stashed.pop(name, None)
+        suppress = self._stop.is_set() and self._user_stopped
+        if stashed is not None:
             self._reported.add(name)
-            self._record_error(exc)
+            if not suppress:
+                self._record_error(stashed)
+        elif (proc.exitcode not in (0, None)
+                and name not in self._reported and not suppress):
+            self._record_error(RuntimeError(
+                f"worker {name!r} died with exit code "
+                f"{proc.exitcode} ({kind}) without reporting an error"))
+        return False
 
     def _monitor(self):
-        """Fail-fast watchdog: surface child errors (and silent deaths) the
-        moment they happen, so siblings stop instead of spinning."""
+        """Watchdog: surface child errors (and silent deaths) the moment
+        they happen — fail-fast by default, elastic respawn for workers
+        covered by the program's ``RestartPolicy``."""
         pending = set(self.processes)
         while pending:
             self._drain_errors()
+            now = time.time()
+            for name, due in list(self._respawn_at.items()):
+                if self._stop.is_set():
+                    self._respawn_at.pop(name, None)
+                    pending.discard(name)
+                elif now >= due:
+                    self._respawn_at.pop(name, None)
+                    self._reported.discard(name)
+                    self._spawn(name, restarts=self._restarts[name])
             for name in list(pending):
+                if name in self._respawn_at:
+                    continue
                 proc = self.processes[name]
                 if proc.is_alive():
                     continue
                 proc.join()
-                pending.discard(name)
                 # give the queue feeder a beat to deliver the child's own
                 # error report before synthesizing one from the exit code
                 d = time.time() + 1.0
                 while (proc.exitcode not in (0, None)
                        and name not in self._reported
+                       and name not in self._stashed
                        and time.time() < d):
                     self._drain_errors()
                     time.sleep(0.02)
-                if (proc.exitcode not in (0, None)
-                        and name not in self._reported
-                        and not (self._stop.is_set() and self._user_stopped)):
-                    self._record_error(RuntimeError(
-                        f"worker {name!r} died with exit code "
-                        f"{proc.exitcode} without reporting an error"))
+                if not self._handle_death(name, proc):
+                    pending.discard(name)
             time.sleep(0.05)
         self._drain_errors()
 
@@ -449,8 +565,9 @@ class MultiprocessLauncher(LauncherBase):
     def _initiate_stop(self):
         # order matters: children must see the stop (and its user/fail-fast
         # flavor) before any parent-side table wakes them with a "stopped"
-        # rate-limiter error.
-        for pipe in self._control_pipes.values():
+        # rate-limiter error.  (list(): the monitor thread may be swapping
+        # pipes for a respawn concurrently.)
+        for pipe in list(self._control_pipes.values()):
             try:
                 pipe.send(("stop", self._user_stopped))
             except (OSError, ValueError, BrokenPipeError):
@@ -460,19 +577,19 @@ class MultiprocessLauncher(LauncherBase):
     # ---------------------------------------------------------------- join
     def _join_runners(self, deadline: Optional[float]):
         super()._join_runners(deadline)
-        for proc in self.processes.values():
+        for proc in list(self.processes.values()):
             remaining = (None if deadline is None
                          else max(deadline - time.time(), 0))
             proc.join(remaining)
         if self._monitor_thread is not None:
-            alive = any(p.is_alive() for p in self.processes.values())
+            alive = any(p.is_alive() for p in list(self.processes.values()))
             if not alive:
                 self._monitor_thread.join(timeout=5)
         self._drain_errors()
 
     def _alive_nodes(self) -> List[str]:
         alive = super()._alive_nodes()
-        alive.extend(name for name, p in self.processes.items()
+        alive.extend(name for name, p in list(self.processes.items())
                      if p.is_alive())
         return alive
 

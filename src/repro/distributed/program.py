@@ -128,6 +128,10 @@ class Program:
         self.name = name
         self._nodes: Dict[str, Node] = {}
         self._order: List[str] = []
+        # Set by the assembly layer (see repro.resilience.RestartPolicy):
+        # launchers with elastic support respawn dead role="worker" nodes
+        # under this policy instead of failing the whole run.
+        self.restart_policy = None
         # RLock: resolving a node dereferences its Handle arguments, which
         # re-enters resolve() on the same thread.
         self._lock = threading.RLock()

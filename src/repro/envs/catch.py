@@ -34,6 +34,22 @@ class Catch(types.Environment):
         self._done = False
         return types.restart(self._board())
 
+    # -- exact resume (repro.resilience) -------------------------------
+    def get_state(self):
+        """Everything a bit-exact resume needs: the ball-column RNG stream
+        and the board position (captured at episode boundaries, where
+        done=True and ball/paddle are about to be re-rolled)."""
+        return {"rng": self._rng.get_state(),
+                "ball": None if self._ball is None else list(self._ball),
+                "paddle": self._paddle,
+                "done": self._done}
+
+    def set_state(self, state):
+        self._rng.set_state(state["rng"])
+        self._ball = None if state["ball"] is None else list(state["ball"])
+        self._paddle = state["paddle"]
+        self._done = state["done"]
+
     def step(self, action):
         if self._done:
             return self.reset()

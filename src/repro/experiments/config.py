@@ -83,6 +83,21 @@ class ExperimentConfig:
         defer to the builder's options).
     telemetry_jsonl: if set, the hub appends every received snapshot to
         this JSONL file (one ``{node, time, metrics}`` record per push).
+    resume: restore the run from ``checkpoint_dir``'s latest run-wide
+        snapshot (learner + replay contents + counters + RNG streams) and
+        continue.  Single-process runs resume bit-exactly; distributed
+        runs restore the same state but re-interleave asynchronously (see
+        ROADMAP "Elastic & resumable runs").  No snapshot present = start
+        fresh.  Requires ``checkpoint_dir``.
+    restart_policy: a ``repro.resilience.RestartPolicy`` enabling elastic
+        actor pools under the multiprocess launcher — dead ``role="worker"``
+        replicas are classified (crash / preemption / shutdown) and
+        respawned with exponential backoff under a per-worker budget,
+        instead of failing the run.  None = fail-fast (the default).
+    chaos: a ``repro.resilience.ChaosPolicy`` injecting seeded faults
+        (worker kills after N steps, courier RPC delay/drop) into
+        distributed runs — the harness the chaos acceptance test drives.
+        None = no injection.
     """
 
     builder_factory: BuilderFactory
@@ -107,6 +122,9 @@ class ExperimentConfig:
     telemetry: Optional[bool] = None
     telemetry_push_period_s: Optional[float] = None
     telemetry_jsonl: Optional[str] = None
+    resume: bool = False
+    restart_policy: Optional[Any] = None
+    chaos: Optional[Any] = None
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -153,6 +171,18 @@ class ExperimentConfig:
                 and self.telemetry_push_period_s <= 0:
             raise ValueError(f"telemetry_push_period_s must be > 0, "
                              f"got {self.telemetry_push_period_s}")
+        if self.resume and not self.checkpoint_dir:
+            raise ValueError("resume=True requires checkpoint_dir")
+        if self.restart_policy is not None:
+            from repro.resilience import RestartPolicy
+            if not isinstance(self.restart_policy, RestartPolicy):
+                raise ValueError(f"restart_policy must be a RestartPolicy, "
+                                 f"got {self.restart_policy!r}")
+        if self.chaos is not None:
+            from repro.resilience import ChaosPolicy
+            if not isinstance(self.chaos, ChaosPolicy):
+                raise ValueError(f"chaos must be a ChaosPolicy, "
+                                 f"got {self.chaos!r}")
 
 
 @dataclasses.dataclass

@@ -48,6 +48,16 @@ def _make_checkpointer(config: ExperimentConfig):
     return Checkpointer(config.checkpoint_dir)
 
 
+def _make_run_checkpointer(config: ExperimentConfig):
+    """Run-wide checkpointer (learner + replay + counters + run state) for
+    the online entrypoints; offline runs keep the plain learner-only
+    ``Checkpointer`` (no replay or actors exist there)."""
+    if not config.checkpoint_dir:
+        return None
+    from repro.resilience import RunCheckpointer
+    return RunCheckpointer(config.checkpoint_dir)
+
+
 def run_experiment(config: ExperimentConfig,
                    num_episodes: Optional[int] = None) -> ExperimentResult:
     """Single-process run: the env loop drives an Agent built from the
@@ -87,8 +97,8 @@ def run_experiment(config: ExperimentConfig,
     else:
         loop = EnvironmentLoop(env, agent, counter=counter, logger=logger,
                                label="actor")
-    checkpointer = _make_checkpointer(config)
-    last_ckpt_step = 0
+    checkpointer = _make_run_checkpointer(config)
+    last_ckpt_step: Optional[int] = None
 
     episodes = config.num_episodes if num_episodes is None else num_episodes
     returns, steps, wall, evals = [], [], [], []
@@ -96,6 +106,58 @@ def run_experiment(config: ExperimentConfig,
     episodes_done = 0
     next_eval = config.eval_every or 0
     t0 = time.time()
+
+    def _run_state():
+        # Everything outside learner/replay/counter that exact resume
+        # needs, captured at an episode boundary (adder buffers flushed,
+        # recurrent actor state about to reinitialize at observe_first).
+        state = {"agent": agent.state_dict(),
+                 "bookkeeping": {
+                     "returns": list(returns), "steps": list(steps),
+                     "wall": list(wall), "evals": list(evals),
+                     "total_steps": total_steps,
+                     "episodes_done": episodes_done,
+                     "next_eval": next_eval,
+                     "elapsed": time.time() - t0}}
+        if hasattr(loop, "state_dict"):
+            state["loop"] = loop.state_dict()
+        if num_envs == 1 and hasattr(env, "get_state"):
+            state["env"] = env.get_state()
+        return state
+
+    def _save_run(at_step):
+        checkpointer.save(at_step, agent.learner.state,
+                          replay=agent.table.state_dict(),
+                          counts=counter.get_counts(),
+                          run_state=_run_state(),
+                          meta={"mode": "single_process"})
+
+    if config.resume and checkpointer is not None:
+        snapshot = checkpointer.restore(agent.learner.state)
+        if snapshot is not None:
+            agent.learner.state = snapshot.learner_state
+            if snapshot.replay is not None:
+                agent.table.load_state_dict(snapshot.replay)
+            if snapshot.counts is not None:
+                counter.set_counts(snapshot.counts)
+            rs = snapshot.run_state or {}
+            if "agent" in rs:
+                agent.load_state_dict(rs["agent"])
+            if "loop" in rs and hasattr(loop, "load_state_dict"):
+                loop.load_state_dict(rs["loop"])
+            if rs.get("env") is not None and hasattr(env, "set_state"):
+                env.set_state(rs["env"])
+            book = rs.get("bookkeeping", {})
+            returns[:] = book.get("returns", [])
+            steps[:] = book.get("steps", [])
+            wall[:] = book.get("wall", [])
+            evals[:] = book.get("evals", [])
+            total_steps = int(book.get("total_steps", 0))
+            episodes_done = int(book.get("episodes_done", 0))
+            next_eval = book.get("next_eval", next_eval)
+            t0 = time.time() - float(book.get("elapsed", 0.0))
+            last_ckpt_step = snapshot.step
+
     while episodes_done < episodes:
         if num_envs > 1:
             # chunk = one eval period (or everything left): the vectorized
@@ -125,8 +187,8 @@ def run_experiment(config: ExperimentConfig,
                                     counter=counter)))
         if checkpointer and config.checkpoint_every:
             learner_steps = int(agent.learner.state.steps)
-            if learner_steps - last_ckpt_step >= config.checkpoint_every:
-                checkpointer.save(agent.learner.state, learner_steps)
+            if learner_steps - (last_ckpt_step or 0) >= config.checkpoint_every:
+                _save_run(learner_steps)
                 last_ckpt_step = learner_steps
         if (config.max_actor_steps is not None
                 and total_steps >= config.max_actor_steps):
@@ -139,8 +201,11 @@ def run_experiment(config: ExperimentConfig,
                       _evaluate(config, builder, agent.learner,
                                 counter=counter)))
     learner_steps = int(agent.learner.state.steps)
-    if checkpointer:
-        checkpointer.save(agent.learner.state, learner_steps)
+    if checkpointer and learner_steps != last_ckpt_step:
+        # Deduped against the cadence checkpoint: when the last periodic
+        # save already captured exactly this learner step, the final save
+        # would be byte-for-byte redundant — skip it.
+        _save_run(learner_steps)
     extras = {}
     learner_stats = getattr(agent.learner, "stats", None)
     if callable(learner_stats):   # MultiLearner: per-replica steps + rounds
@@ -171,6 +236,25 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
     builder = config.builder_factory(spec)
     target = (config.max_actor_steps if max_actor_steps is None
               else max_actor_steps)
+    checkpointer = _make_run_checkpointer(config)
+
+    restore = None
+    if config.resume and checkpointer is not None:
+        def restore(learner, table, counter):
+            # Called by the assembly layer once the services exist but
+            # before any worker launches: the restored learner/replay/
+            # counter state is the first state anything observes.  Workers
+            # then re-interleave asynchronously — same state, not the same
+            # schedule (see ROADMAP "Elastic & resumable runs").
+            snapshot = checkpointer.restore(learner.state)
+            if snapshot is None:
+                return
+            learner.state = snapshot.learner_state
+            if snapshot.replay is not None:
+                table.load_state_dict(snapshot.replay)
+            if snapshot.counts is not None:
+                counter.set_counts(snapshot.counts)
+
     dist = make_distributed_agent(builder, config.environment_factory,
                                   num_actors=num_actors, seed=config.seed,
                                   with_evaluator=with_evaluator,
@@ -192,14 +276,34 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   telemetry=config.telemetry,
                                   telemetry_push_period_s=(
                                       config.telemetry_push_period_s),
-                                  telemetry_jsonl=config.telemetry_jsonl)
-    checkpointer = _make_checkpointer(config)
+                                  telemetry_jsonl=config.telemetry_jsonl,
+                                  restart_policy=config.restart_policy,
+                                  chaos=config.chaos,
+                                  restore=restore)
+    last_ckpt_step: Optional[int] = None
+
+    def _save_run(at_step, counts):
+        # Services (learner, replay, counter) are parent-resident under
+        # both backends, so the parent can snapshot them directly; workers
+        # hold no durable state (their experience is already in replay).
+        checkpointer.save(at_step, dist.learner.state,
+                          replay=dist.table.state_dict(),
+                          counts=counts,
+                          meta={"mode": "distributed",
+                                "launcher": config.launcher})
+
     t0 = time.time()
     try:
         while time.time() - t0 < timeout_s:
             counts = dist.counter.get_counts()
             if target is not None and counts.get("actor_steps", 0) >= target:
                 break
+            if checkpointer and config.checkpoint_every:
+                learner_steps = int(dist.learner.state.steps)
+                if learner_steps - (last_ckpt_step or 0) \
+                        >= config.checkpoint_every:
+                    _save_run(learner_steps, counts)
+                    last_ckpt_step = learner_steps
             time.sleep(poll_s)
         counts = dist.counter.get_counts()
         rl = dist.table.rate_limiter
@@ -220,6 +324,9 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
         learner_stats = dist.learner_stats()
         if learner_stats is not None:   # multi-learner: replica steps/rounds
             extras["learners"] = learner_stats
+        restart_stats = getattr(dist.launcher, "restart_stats", None)
+        if callable(restart_stats):   # elastic supervisor bookkeeping
+            extras["resilience"] = restart_stats()
         if with_evaluator:
             extras["evaluator_returns"] = dist.evaluator_returns()
     finally:
@@ -235,8 +342,8 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
     evals = ([(total_steps, _evaluate(config, builder, dist.learner))]
              if config.eval_episodes > 0 else [])
     learner_steps = int(dist.learner.state.steps)
-    if checkpointer:
-        checkpointer.save(dist.learner.state, learner_steps)
+    if checkpointer and learner_steps != last_ckpt_step:
+        _save_run(learner_steps, counts)
     return ExperimentResult(
         train_returns=[], actor_steps=[total_steps], walltime=[extras["walltime"]],
         eval_returns=evals, counts=counts, learner_steps=learner_steps,

@@ -21,10 +21,17 @@ Slot lifecycle:
   refresh; slots with a stale generation are re-prefilled before their
   next decode (stale-cache rejection — K/V computed under old weights
   never mixes with fresh queries).
+
+Churn tolerance (repro.resilience): a worker that dies without calling
+``release`` would leak its slots forever.  Every ``lookup``/``acquire``
+touches the slot's last-used clock; when ``acquire`` finds the pool full
+it first reaps slots idle for longer than ``reap_idle_s`` — a live episode
+touches its slot every policy step, so only dead clients' slots qualify.
 """
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional
 
 import jax
@@ -38,7 +45,8 @@ class CacheSlotsExhausted(RuntimeError):
 
 
 class _Slot:
-    __slots__ = ("index", "key", "pos", "cache_pos", "generation")
+    __slots__ = ("index", "key", "pos", "cache_pos", "generation",
+                 "last_used")
 
     def __init__(self, index: int):
         self.index = index
@@ -49,25 +57,31 @@ class _Slot:
         #                           mid-episode re-prefill, which restarts
         #                           the cache at window-relative positions)
         self.generation = -1
+        self.last_used = 0.0      # monotonic clock of the last touch
 
     def reset(self, key, generation: int):
         self.key = key
         self.pos = -1
         self.cache_pos = -1
         self.generation = generation
+        self.last_used = time.monotonic()
 
 
 class KVCachePool:
     """``num_slots`` per-episode KV-cache slots over one batched cache."""
 
     def __init__(self, arch: ArchConfig, num_slots: int,
-                 timeout_s: float = 5.0):
+                 timeout_s: float = 5.0,
+                 reap_idle_s: Optional[float] = 60.0):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.arch = arch
         self.num_slots = num_slots
         self.scratch_index = num_slots        # pad rows land here
         self.timeout_s = timeout_s
+        # Under pool pressure, slots untouched for this long are reclaimed
+        # (their client died without releasing).  None disables reaping.
+        self.reap_idle_s = reap_idle_s
         self.cache = network.init_cache(arch, num_slots + 1)
 
         self._cond = threading.Condition()
@@ -76,12 +90,36 @@ class KVCachePool:
         self._by_key: Dict[object, _Slot] = {}
         self.generation = 0
         self.stats = {"acquires": 0, "releases": 0, "exhausted_waits": 0,
-                      "invalidations": 0}
+                      "invalidations": 0, "reaped": 0}
 
     # --------------------------------------------------------- slot metadata
     def lookup(self, key) -> Optional[_Slot]:
         with self._cond:
-            return self._by_key.get(key)
+            slot = self._by_key.get(key)
+            if slot is not None:
+                slot.last_used = time.monotonic()
+            return slot
+
+    def _release_locked(self, slot: _Slot):
+        self._by_key.pop(slot.key, None)
+        slot.key = None
+        slot.pos = -1
+        slot.cache_pos = -1
+        self._free.append(slot.index)
+        self._cond.notify_all()
+
+    def _reap_idle_locked(self) -> int:
+        """Reclaim slots whose holder went silent (worker churn): a live
+        episode touches its slot every policy step, so ``reap_idle_s`` of
+        silence means the client is gone.  Caller holds the lock."""
+        if self.reap_idle_s is None:
+            return 0
+        cutoff = time.monotonic() - self.reap_idle_s
+        stale = [s for s in self._by_key.values() if s.last_used < cutoff]
+        for slot in stale:
+            self._release_locked(slot)
+        self.stats["reaped"] += len(stale)
+        return len(stale)
 
     def acquire(self, key, timeout: Optional[float] = None) -> _Slot:
         """Claim a slot for ``key`` (idempotent: an existing slot is
@@ -91,11 +129,14 @@ class KVCachePool:
         with self._cond:
             slot = self._by_key.get(key)
             if slot is not None:
+                slot.last_used = time.monotonic()
                 return slot
+            if not self._free:
+                self._reap_idle_locked()
             if not self._free:
                 self.stats["exhausted_waits"] += 1
                 self._cond.wait_for(lambda: bool(self._free), timeout)
-            if not self._free:
+            if not self._free and not self._reap_idle_locked():
                 raise CacheSlotsExhausted(
                     f"all {self.num_slots} KV-cache slots held by live "
                     f"episodes (waited {timeout:.1f}s)")

@@ -48,6 +48,17 @@ class RateLimiter:
             self._stopped = True
             self._lock.notify_all()
 
+    # -- exact-resume serialization -----------------------------------
+    def state_dict(self) -> dict:
+        with self._lock:
+            return {"inserts": self._inserts, "samples": self._samples}
+
+    def load_state_dict(self, state: dict):
+        with self._lock:
+            self._inserts = int(state["inserts"])
+            self._samples = int(state["samples"])
+            self._lock.notify_all()
+
     # -- blocking predicates (override) -------------------------------
     def _can_insert(self) -> bool:
         return True

@@ -24,6 +24,19 @@ class Selector:
         """Returns (key, probability_of_selection)."""
         raise NotImplementedError
 
+    # -- exact-resume serialization ------------------------------------
+    # Selectors that implement both hooks restart bit-exactly: the same
+    # sample() draws come out after a save/load round trip.  Selectors
+    # that don't are rebuilt from the table's items on restore (correct
+    # distribution, fresh RNG stream — not bit-exact).
+    def state_dict(self) -> dict:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support exact-resume "
+            "serialization; the table will rebuild it from item priorities")
+
+    def load_state_dict(self, state: dict):
+        raise NotImplementedError
+
 
 class Fifo(Selector):
     consumes = True
@@ -50,6 +63,12 @@ class Fifo(Selector):
         if not self._keys:
             raise IndexError("empty")
         return self._keys.pop(0), 1.0
+
+    def state_dict(self):
+        return {"kind": type(self).__name__, "keys": list(self._keys)}
+
+    def load_state_dict(self, state):
+        self._keys = list(state["keys"])
 
 
 class Lifo(Fifo):
@@ -86,6 +105,17 @@ class Uniform(Selector):
             raise IndexError("empty")
         k = self._rng.choice(self._keys)
         return k, 1.0 / len(self._keys)
+
+    def state_dict(self):
+        # _keys order matters: rng.choice indexes into it, so restoring the
+        # same order + the same rng state reproduces the draw sequence.
+        return {"kind": "Uniform", "keys": list(self._keys),
+                "rng": self._rng.getstate()}
+
+    def load_state_dict(self, state):
+        self._keys = list(state["keys"])
+        self._pos = {k: i for i, k in enumerate(self._keys)}
+        self._rng.setstate(state["rng"])
 
 
 class SumTree:
@@ -162,3 +192,27 @@ class Prioritized(Selector):
             key = next(iter(self._slot))
             slot = self._slot[key]
         return key, self._tree.get(slot) / total
+
+    def state_dict(self):
+        # The tree array is serialized VERBATIM: set() accumulates
+        # incremental float deltas, so rebuilding from priorities would
+        # round internal sums differently and shift find() boundaries —
+        # breaking bit-exact resume.
+        return {"kind": "Prioritized", "alpha": self.alpha,
+                "capacity": self._tree.capacity,
+                "tree": self._tree.tree.copy(),
+                "slot": dict(self._slot),
+                "free": list(self._free),
+                "rng": self._rng.getstate()}
+
+    def load_state_dict(self, state):
+        if int(state["capacity"]) != self._tree.capacity:
+            raise ValueError(
+                f"Prioritized capacity mismatch: checkpoint has "
+                f"{state['capacity']}, selector has {self._tree.capacity}")
+        self.alpha = float(state["alpha"])
+        self._tree.tree = np.asarray(state["tree"], np.float64).copy()
+        self._slot = {int(k): int(s) for k, s in state["slot"].items()}
+        self._key_of = {s: k for k, s in self._slot.items()}
+        self._free = [int(s) for s in state["free"]]
+        self._rng.setstate(state["rng"])

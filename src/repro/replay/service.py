@@ -28,7 +28,6 @@ Design:
 """
 from __future__ import annotations
 
-import itertools
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -43,6 +42,33 @@ REPLAY_INTERFACE = ("insert", "sample", "update_priorities", "size", "stats")
 
 # Knuth's multiplicative hash constant: decorrelates consecutive tickets.
 _HASH_MULT = 2654435761
+
+
+class _Ticket:
+    """Monotonic routing cursor.  itertools.count would be marginally
+    cheaper but can't be read or restored, and exact resume needs the
+    insert/sample routing position to survive a checkpoint."""
+
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self, start: int = 0):
+        self._lock = threading.Lock()
+        self._value = int(start)
+
+    def next(self) -> int:
+        with self._lock:
+            value = self._value
+            self._value += 1
+            return value
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+    def set(self, value: int):
+        with self._lock:
+            self._value = int(value)
 
 
 class AggregateRateLimiter:
@@ -105,10 +131,8 @@ class ShardedReplay:
         self.routing = routing
         self.capacity = sum(s.capacity for s in self.shards)
         self.rate_limiter = AggregateRateLimiter(self.shards)
-        # itertools.count is C-implemented, so next() is atomic under the
-        # GIL — contention-free tickets for insert routing.
-        self._insert_ticket = itertools.count()
-        self._sample_ticket = itertools.count()
+        self._insert_ticket = _Ticket()
+        self._sample_ticket = _Ticket()
 
     @classmethod
     def from_factory(cls, make_replay: Callable[[], Table], num_shards: int,
@@ -130,7 +154,7 @@ class ShardedReplay:
 
     # ------------------------------------------------------------ routing
     def _route(self) -> int:
-        ticket = next(self._insert_ticket)
+        ticket = self._insert_ticket.next()
         if self.routing == "hash":
             return ((ticket * _HASH_MULT) >> 7) % self.num_shards
         return ticket % self.num_shards
@@ -158,7 +182,7 @@ class ShardedReplay:
                timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
         """Interleaved cross-shard sampling: item j of the batch comes from
         shard (cursor + j) % N, each drawn under that shard's own limiter."""
-        start = next(self._sample_ticket)
+        start = self._sample_ticket.next()
         out: List[Tuple[Item, float]] = []
         for j in range(batch_size):
             idx = (start + j) % self.num_shards
@@ -188,6 +212,28 @@ class ShardedReplay:
     def stop(self):
         for s in self.shards:
             s.stop()
+
+    # ----------------------------------------------------- exact resume
+    def state_dict(self) -> Dict:
+        """Per-shard table snapshots plus the routing cursors, so resumed
+        inserts/samples land on the same shards they would have."""
+        return {
+            "num_shards": self.num_shards,
+            "routing": self.routing,
+            "shards": [s.state_dict() for s in self.shards],
+            "insert_ticket": self._insert_ticket.value,
+            "sample_ticket": self._sample_ticket.value,
+        }
+
+    def load_state_dict(self, state: Dict):
+        if int(state["num_shards"]) != self.num_shards:
+            raise ValueError(
+                f"shard count mismatch: checkpoint has "
+                f"{state['num_shards']}, service has {self.num_shards}")
+        for shard, shard_state in zip(self.shards, state["shards"]):
+            shard.load_state_dict(shard_state)
+        self._insert_ticket.set(state["insert_ticket"])
+        self._sample_ticket.set(state["sample_ticket"])
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict:

@@ -134,6 +134,46 @@ class Table:
         with self._lock:
             return len(self._order)
 
+    # ----------------------------------------------------- exact resume
+    def state_dict(self) -> Dict[str, Any]:
+        """A consistent snapshot of the table: items (in insertion order,
+        so FIFO eviction resumes identically), priorities, the key counter,
+        selector internals, and rate-limiter accounting."""
+        with self._lock:
+            try:
+                selector_state = self.selector.state_dict()
+            except NotImplementedError:
+                selector_state = None
+            return {
+                "name": self.name,
+                "capacity": self.capacity,
+                "items": [(k, self._items[k].data, self._items[k].priority)
+                          for k in self._order],
+                "next_key": self._next_key,
+                "selector": selector_state,
+                "rate_limiter": self.rate_limiter.state_dict(),
+            }
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        """Restore into a freshly built table (same capacity/selector/
+        limiter construction as at save time)."""
+        with self._lock:
+            self._items.clear()
+            self._order.clear()
+            for key, data, priority in state["items"]:
+                key = int(key)
+                self._items[key] = Item(key, data, float(priority))
+                self._order[key] = None
+            self._next_key = int(state["next_key"])
+            if state.get("selector") is not None:
+                self.selector.load_state_dict(state["selector"])
+            else:
+                # Best-effort rebuild for selectors without exact-resume
+                # support: same membership and priorities, fresh RNG stream.
+                for key, _, priority in state["items"]:
+                    self.selector.insert(int(key), float(priority))
+        self.rate_limiter.load_state_dict(state["rate_limiter"])
+
     @property
     def stopped(self) -> bool:
         return self.rate_limiter.stopped

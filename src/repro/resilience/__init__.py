@@ -1,0 +1,21 @@
+"""Fault tolerance for distributed runs (§4.2 of the paper).
+
+Three pillars:
+
+- ``RunCheckpointer`` — a consistent, crash-safe snapshot of an entire run
+  (learner pytree, replay contents, counter totals, RNG/cadence streams),
+  so ``resume=True`` restarts bit-for-bit.
+- ``RestartPolicy`` / ``classify_exit`` — the elastic-pool supervisor
+  contract: worker deaths are classified (crash / preempted / shutdown)
+  and ``role="worker"`` replicas respawn with exponential backoff under a
+  max-restarts budget.
+- ``ChaosPolicy`` — seeded fault injection (kill-after-N-steps workers,
+  RPC delay/drop at the courier layer) for acceptance-testing the above.
+"""
+from repro.resilience.chaos import (ChaosPolicy,  # noqa: F401
+                                    KillSchedule, RPCChaosInjector)
+from repro.resilience.run_checkpoint import (RunCheckpointer,  # noqa: F401
+                                             RunSnapshot)
+from repro.resilience.supervisor import (CRASH, PREEMPTED,  # noqa: F401
+                                         SHUTDOWN, RestartPolicy,
+                                         classify_exit)

@@ -148,6 +148,36 @@ def test_pool_exhaustion_backpressure():
     with pytest.raises(CacheSlotsExhausted):
         pool.acquire("b")
     assert time.monotonic() - t0 >= 0.04   # it actually waited
+
+
+def test_pool_reaps_idle_slots_of_dead_clients():
+    """Churn tolerance (repro.resilience): a worker that dies without
+    releasing leaks its slots only until pool pressure triggers the idle
+    reaper — a live episode touches its slot every step and is spared."""
+    builder = _builder()
+    pool = KVCachePool(builder.arch, num_slots=2, timeout_s=0.05,
+                       reap_idle_s=0.1)
+    dead = pool.acquire("dead-client")
+    pool.acquire("live-client")
+    time.sleep(0.15)                       # both slots now look idle...
+    pool.lookup("live-client")             # ...but the live one is touched
+    fresh = pool.acquire("fresh-client")   # pressure: reaps only the dead
+    assert fresh.index == dead.index
+    assert pool.stats["reaped"] == 1
+    assert pool.lookup("dead-client") is None
+    assert pool.lookup("live-client") is not None
+    assert pool.held() == 2
+
+
+def test_pool_reaping_disabled_keeps_backpressure():
+    builder = _builder()
+    pool = KVCachePool(builder.arch, num_slots=1, timeout_s=0.05,
+                       reap_idle_s=None)
+    pool.acquire("a")
+    time.sleep(0.15)
+    with pytest.raises(CacheSlotsExhausted):
+        pool.acquire("b")
+    assert pool.stats["reaped"] == 0
     assert pool.stats["exhausted_waits"] == 1
 
     # a blocked acquire unblocks as soon as a slot frees
