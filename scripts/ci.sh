@@ -70,6 +70,9 @@ python scripts/smoke_multiprocess.py
 echo "[ci] smoke: chaos harness — actor kill + elastic respawn"
 python scripts/smoke_chaos.py
 
+echo "[ci] smoke: chaos harness — replay-shard kill + service failover"
+python scripts/smoke_chaos.py --target replay/shard_0
+
 echo "[ci] smoke: DQN on Catch via repro.experiments.run_experiment"
 python - <<'EOF'
 import time

@@ -1,16 +1,24 @@
-"""CI smoke: the chaos harness kills an actor mid-run and the elastic
-supervisor absorbs it (repro.resilience).
+"""CI smoke: the chaos harness kills a node mid-run and the run absorbs it
+(repro.resilience).
 
-A seeded ``ChaosPolicy`` hard-kills ``actor/0`` after 150 environment
-steps (``os._exit`` — the same failure surface as an OOM kill); the
-``MultiprocessLauncher`` classifies the death as a crash, respawns the
-replica under its ``RestartPolicy`` budget, and the respawned worker —
-seeing ``REPRO_WORKER_RESTARTS`` — disarms its kill schedule and trains
-to the step target.
+Default mode (no ``--target``): a seeded ``ChaosPolicy`` hard-kills
+``actor/0`` after 150 environment steps (``os._exit`` — the same failure
+surface as an OOM kill); the ``MultiprocessLauncher`` classifies the death
+as a crash, respawns the replica under its ``RestartPolicy`` budget, and
+the respawned worker — seeing ``REPRO_WORKER_RESTARTS`` — disarms its kill
+schedule and trains to the step target.
+
+``--target <service>`` mode (e.g. ``--target replay/shard_0``): the kill
+lands on a ``role="service"`` node instead.  The ``ServiceWatchdog``
+simulates the death (mark_down + courier-server teardown), restores the
+service from its last periodic snapshot, and re-binds its server at the
+same address; actor workers absorb the outage (reconnect or skipped adds)
+and the run still reaches the step target.
 
 A real file (not a stdin heredoc) because the spawn context re-imports
 ``__main__`` in every child.
 """
+import argparse
 import time
 
 from repro.agents.dqn import DQNBuilder, DQNConfig
@@ -29,7 +37,7 @@ def env_factory(seed):
     return Catch(seed=seed)
 
 
-def main():
+def _run_worker_chaos():
     t0 = time.time()
     config = ExperimentConfig(
         builder_factory=builder_factory,
@@ -52,6 +60,48 @@ def main():
     assert resilience["restarts"].get("actor/0") == 1, (
         f"the killed actor was not respawned exactly once: {resilience}")
     assert "crash" in resilience["exit_kinds"]["actor/0"], resilience
+
+
+def _run_service_chaos(target: str):
+    t0 = time.time()
+    config = ExperimentConfig(
+        builder_factory=builder_factory,
+        environment_factory=env_factory,
+        seed=0, eval_episodes=0, launcher="multiprocess",
+        num_replay_shards=2,
+        restart_policy=RestartPolicy(max_restarts=3),
+        chaos=ChaosPolicy(kill_after_steps=200, kill_targets=(target,),
+                          max_kills=1))
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=1500, timeout_s=180)
+    steps = int(result.counts.get("actor_steps", 0))
+    resilience = result.extras["resilience"]
+    print(f"[ci] service chaos smoke ({target}): {steps} actor steps, "
+          f"{result.learner_steps} learner steps, "
+          f"service restarts {resilience['service_restarts']}, "
+          f"service exit kinds {resilience['service_exit_kinds']}, "
+          f"worker restarts {resilience['restarts']}, "
+          f"{time.time() - t0:.0f}s")
+    assert steps >= 1500, "run never reached the step target through chaos"
+    assert result.learner_steps > 0, "learner never stepped"
+    assert resilience["service_restarts"].get(target) == 1, (
+        f"the killed service was not restored exactly once: {resilience}")
+    assert "crash" in resilience["service_exit_kinds"][target], resilience
+    assert resilience["restarts"] == {}, (
+        f"a worker died during the service outage: {resilience}")
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--target", default=None,
+        help="service node to kill (e.g. replay/shard_0) instead of the "
+             "default actor/0 worker kill")
+    args = parser.parse_args()
+    if args.target is None:
+        _run_worker_chaos()
+    else:
+        _run_service_chaos(args.target)
 
 
 if __name__ == "__main__":

@@ -246,6 +246,59 @@ class _LearnerWorker(LearnerReplicaWorker):
         super().__init__(learner, param_server=None, max_steps=max_steps)
 
 
+class _ResilientActor:
+    """Graceful degradation during a service's restart window.
+
+    The OUTERMOST actor wrapper in workers running under a
+    ``RestartPolicy``: an add that hits an unreachable replay service is
+    skipped (the transition is lost, counted in
+    ``resilience/skipped_adds``) and a weight sync that cannot reach the
+    learner keeps acting on the ``VariableClient``'s cached params
+    (``resilience/skipped_updates``) — instead of the ``ConnectionError``
+    killing the worker and burning a restart budget that belongs to real
+    failures.  Catches ``ConnectionError`` so both transport-level
+    unavailability (``ServiceUnavailable`` after the reconnect deadline)
+    and the application-level down-marker a killed service raises are
+    absorbed uniformly.  ``select_action`` is NOT wrapped: with no action
+    there is no step to degrade to.
+    """
+
+    def __init__(self, actor):
+        self._actor = actor
+        self._m_adds = None
+        self._m_updates = None
+
+    def _skip(self, attr, name):
+        metric = getattr(self, attr)
+        if metric is None:
+            if not _telemetry.enabled():
+                return
+            metric = _telemetry.counter(name)
+            setattr(self, attr, metric)
+        metric.inc()
+
+    def observe_first(self, *args, **kwargs):
+        try:
+            return self._actor.observe_first(*args, **kwargs)
+        except ConnectionError:
+            self._skip("_m_adds", "resilience/skipped_adds")
+
+    def observe(self, *args, **kwargs):
+        try:
+            return self._actor.observe(*args, **kwargs)
+        except ConnectionError:
+            self._skip("_m_adds", "resilience/skipped_adds")
+
+    def update(self, *args, **kwargs):
+        try:
+            return self._actor.update(*args, **kwargs)
+        except ConnectionError:
+            self._skip("_m_updates", "resilience/skipped_updates")
+
+    def __getattr__(self, name):
+        return getattr(self._actor, name)
+
+
 class _ActorWorker:
     """Actor node: its own environment instance(s) + loop (Fig 4).  Every
     collaborator arrives as a handle (in-memory or courier RemoteHandle) —
@@ -268,7 +321,8 @@ class _ActorWorker:
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None,
                  num_envs: int = 1, inference=None, telemetry=None,
-                 chaos=None, rpc_chaos=None):
+                 chaos=None, rpc_chaos=None, rpc_retry=None,
+                 resilient: bool = False):
         # FIRST: in a spawn child this configures the process registry, so
         # everything constructed below (actors, engines, courier clients)
         # records into it.  Under the local launcher the parent already
@@ -281,6 +335,11 @@ class _ActorWorker:
             injector = rpc_chaos.rpc_injector()
             if injector is not None:
                 injector.install()
+        if rpc_retry is not None:
+            # Likewise process-global: every courier client in this worker
+            # retries under the run's RetryConfig.
+            from repro.distributed import courier
+            courier.set_retry_config(rpc_retry)
         builder = _builder_of(builder)
         options = builder.options
         num_envs = max(int(num_envs), 1)
@@ -304,6 +363,10 @@ class _ActorWorker:
         if chaos is not None:
             # no-op when the schedule has disarmed (max_kills delivered)
             actor = chaos.wrap(actor)
+        if resilient:
+            # outermost, OUTSIDE the chaos wrapper: degradation absorbs
+            # ConnectionErrors from below without hiding the kill schedule
+            actor = _ResilientActor(actor)
         # weight-sync cadence lives in the LOOP (update_period in env steps /
         # ticks); the client fetches on every poke it does receive.  A tick
         # of the vectorized loop covers num_envs transitions, so the tick
@@ -472,6 +535,10 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            telemetry_jsonl: Optional[str] = None,
                            restart_policy=None,
                            chaos=None,
+                           rpc_retry=None,
+                           barrier_timeout_s: Optional[float] = None,
+                           min_quorum: Optional[int] = None,
+                           service_snapshot_period_s: Optional[float] = None,
                            restore=None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
     on a Launchpad-lite graph — Fig 4 of the paper.
@@ -505,16 +572,34 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     see ONE logical learner.
 
     ``restart_policy`` (a ``repro.resilience.RestartPolicy``) makes the
-    worker pool elastic: launchers with supervision support respawn dead
-    ``role="worker"`` replicas under it instead of failing the run.
-    ``chaos`` (a ``repro.resilience.ChaosPolicy``) resolves seeded fault
-    schedules per actor replica.  ``restore`` is a pre-launch hook called
-    as ``restore(learner, table, counter)`` once every service exists but
-    before any worker runs — exact-resume state is applied through it.
+    run elastic end to end: launchers with supervision support respawn
+    dead ``role="worker"`` replicas under it, restore killed
+    ``role="service"`` nodes from their periodic snapshots (re-bound at
+    the same courier address; cadence ``service_snapshot_period_s``), and
+    wrap every actor in graceful degradation so a service's restart
+    window costs skipped adds, not dead workers.  ``chaos`` (a
+    ``repro.resilience.ChaosPolicy``) resolves seeded fault schedules per
+    actor replica AND per targeted service node.  ``rpc_retry`` (a
+    ``repro.distributed.RetryConfig``) tunes courier reconnect/retry
+    backoff in every worker.  ``barrier_timeout_s`` / ``min_quorum``
+    enable the parameter server's quorum mode so averaging rounds
+    tolerate stragglers and mid-restore replicas.  ``restore`` is a
+    pre-launch hook called as ``restore(learner, table, counter)`` once
+    every service exists but before any worker runs — exact-resume state
+    is applied through it.
     """
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
     program.restart_policy = restart_policy
+    if service_snapshot_period_s is not None:
+        if service_snapshot_period_s <= 0:
+            raise ValueError(f"service_snapshot_period_s must be > 0, "
+                             f"got {service_snapshot_period_s}")
+        program.service_snapshot_period_s = service_snapshot_period_s
+    if chaos is not None and launcher_cls.requires_pickling:
+        # service kill schedules resolve launcher-side (the watchdog owns
+        # the services); same process-isolation gate as actor chaos below
+        program.chaos_policy = chaos
     options = builder.options
     # Telemetry first: every component constructed below registers its
     # metrics/probes against the (re)configured process registry.  The
@@ -548,7 +633,9 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     if multi:
         replica_learners, datasets, shards = _make_replica_learners(
             builder, table, replicas, prefetch=prefetch)
-        param_server = ParameterServer(replicas, period)
+        param_server = ParameterServer(replicas, period,
+                                       barrier_timeout_s=barrier_timeout_s,
+                                       min_quorum=min_quorum)
         replica_workers = [
             LearnerReplicaWorker(replica_learner, param_server, i, period,
                                  max_steps=max_learner_steps,
@@ -689,7 +776,9 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
         role="worker", num_replicas=num_actors,
         num_envs=num_envs, inference=inference_handle,
         telemetry=actor_telemetry,
-        chaos=actor_chaos, rpc_chaos=actor_rpc_chaos)
+        chaos=actor_chaos, rpc_chaos=actor_rpc_chaos,
+        rpc_retry=rpc_retry,
+        resilient=restart_policy is not None)
     eval_log_handle = None
     if with_evaluator:
         eval_log_handle = program.add_node(

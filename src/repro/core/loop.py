@@ -33,6 +33,14 @@ class Counter:
         with self._lock:
             self._counts = dict(counts)
 
+    # Recoverable-protocol aliases (repro.resilience.failover): the counter
+    # service snapshots and restores like any other stateful service.
+    def state_dict(self) -> Dict[str, float]:
+        return self.get_counts()
+
+    def load_state_dict(self, counts: Dict[str, float]):
+        self.set_counts(counts)
+
 
 class EnvironmentLoop:
     def __init__(self, environment: Environment, actor: Actor,

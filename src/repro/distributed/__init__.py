@@ -2,11 +2,15 @@
 
 ``program`` declares the graph (nodes, roles, replicas, RPC interfaces),
 ``courier`` is the socket RPC layer its edges degrade to across process
-boundaries, and ``launchers`` holds the backend registry
+boundaries (with ``RetryConfig``-governed reconnect/backoff and a typed
+``ServiceUnavailable`` once a peer stays down past the deadline), and
+``launchers`` holds the backend registry
 (``get_launcher("local" | "multiprocess")``).
 """
+from repro.distributed.backoff import BackoffPolicy  # noqa: F401
 from repro.distributed.courier import (  # noqa: F401
-    RemoteError, RemoteHandle, Server, serve)
+    RemoteError, RemoteHandle, RetryConfig, Server, ServiceUnavailable,
+    serve, set_retry_config)
 from repro.distributed.launchers import (  # noqa: F401
     JoinTimeout, Launcher, LauncherBase, LocalLauncher, MultiprocessLauncher,
     WorkerErrors, get_launcher, register_launcher)

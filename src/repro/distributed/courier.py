@@ -26,6 +26,7 @@ spawn payloads / control pipes), never over the socket.
 """
 from __future__ import annotations
 
+import dataclasses
 import hmac
 import pickle
 import secrets
@@ -36,6 +37,7 @@ import time
 import traceback
 from typing import Any, Optional, Sequence, Tuple
 
+from repro.distributed.backoff import BackoffPolicy
 from repro.telemetry import registry as _telemetry
 
 _LEN = struct.Struct(">I")
@@ -58,6 +60,59 @@ IDEMPOTENT_METHODS = frozenset({
 # half-open connection (peer died without FIN) can stall a retryable read.
 IDEMPOTENT_RECV_TIMEOUT_S = 30.0
 
+
+@dataclasses.dataclass(frozen=True)
+class RetryConfig:
+    """Client-side retry behaviour for ``RemoteHandle`` calls.
+
+    Two independent knobs, one shared ``BackoffPolicy``:
+
+    - ``reconnect_deadline_s`` bounds the RECONNECT path: connection
+      refused/reset before the request was delivered (including a service's
+      restart window, and chaos-injected drops).  These are always safe to
+      retry for any method — no bytes reached the server — so the client
+      keeps retrying with jittered backoff until the deadline, then raises
+      ``ServiceUnavailable``.
+    - ``max_attempts`` bounds the RESPONSE-LOST path: the request was sent
+      but the reply never arrived.  Only ``IDEMPOTENT_METHODS`` retry here
+      (the server may already have executed a non-idempotent call).
+
+    Process-global, installed via ``set_retry_config`` — plumbed from
+    ``ExperimentConfig.rpc_retry`` into every worker.
+    """
+
+    max_attempts: int = 3
+    reconnect_deadline_s: float = 5.0
+    backoff: BackoffPolicy = BackoffPolicy()
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.reconnect_deadline_s <= 0:
+            raise ValueError(f"reconnect_deadline_s must be > 0, "
+                             f"got {self.reconnect_deadline_s}")
+        if not isinstance(self.backoff, BackoffPolicy):
+            raise TypeError(f"backoff must be a BackoffPolicy, "
+                            f"got {type(self.backoff).__name__}")
+
+
+DEFAULT_RETRY = RetryConfig()
+_RETRY = DEFAULT_RETRY
+
+
+def set_retry_config(config: Optional[RetryConfig]):
+    """Install a process-wide retry config (None restores the default)."""
+    global _RETRY
+    if config is not None and not isinstance(config, RetryConfig):
+        raise TypeError(f"expected RetryConfig or None, "
+                        f"got {type(config).__name__}")
+    _RETRY = config if config is not None else DEFAULT_RETRY
+
+
+def retry_config() -> RetryConfig:
+    return _RETRY
+
 # Chaos injection point (see repro.resilience.chaos): when set, consulted
 # client-side before every send — may sleep (delay) or raise
 # ConnectionError (drop).  Faults fire before any bytes hit the wire, so a
@@ -73,6 +128,20 @@ def set_rpc_chaos(injector):
 
 class CourierClosed(ConnectionError):
     """The peer closed the connection (server stopped, or vice versa)."""
+
+
+class ServiceUnavailable(ConnectionError):
+    """The service stayed unreachable past the reconnect deadline (its
+    restart window exceeded the budget, or it is down for good) — or, when
+    raised server-side, the service is marked down awaiting failover.  A
+    ``ConnectionError`` subclass so degradation paths catch transport and
+    application unavailability uniformly."""
+
+
+class AuthenticationError(ConnectionRefusedError):
+    """The courier HMAC handshake failed (missing/wrong authkey).  Never
+    retried: backoff cannot fix a key mismatch, and fast-failing keeps a
+    misconfigured client from hammering the server."""
 
 
 class RemoteError(RuntimeError):
@@ -105,17 +174,37 @@ def _send_frame(sock: socket.socket, obj: Any) -> int:
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
     buf = b""
     while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
+        try:
+            chunk = sock.recv(n - len(buf))
+        except OSError as e:
+            e.bytes_read = len(buf)
+            raise
         if not chunk:
-            raise CourierClosed("connection closed mid-frame"
+            err = CourierClosed("connection closed mid-frame"
                                 if buf else "connection closed")
+            err.bytes_read = len(buf)
+            raise err
         buf += chunk
     return buf
 
 
 def _recv_frame(sock: socket.socket) -> Tuple[Any, int]:
-    """Receive one frame; returns ``(obj, payload_bytes)``."""
-    (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    """Receive one frame; returns ``(obj, payload_bytes)``.
+
+    A connection failure (clean EOF or reset — the FIN/RST race makes
+    either equally likely when the peer died) before the first byte of
+    the length prefix is tagged ``no_response=True`` on the raised
+    exception: the peer never wrote a single response byte, which the
+    client's retry logic distinguishes from a mid-response failure.
+    Timeouts are never tagged (the peer may be alive but slow).
+    """
+    try:
+        (length,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    except (CourierClosed, OSError) as e:
+        if getattr(e, "bytes_read", None) == 0 \
+                and not isinstance(e, (socket.timeout, TimeoutError)):
+            e.no_response = True
+        raise
     return pickle.loads(_recv_exact(sock, length)), length
 
 
@@ -254,6 +343,16 @@ class Server:
 
     def stop(self):
         self._stopped.set()
+        # shutdown() BEFORE close(): the accept thread is blocked inside
+        # the accept(2) syscall, which on Linux keeps the open file
+        # description referenced — a bare close() would leave the socket
+        # LISTENING (and the port unbindable for a failover re-bind at the
+        # same address) until that thread wakes, which it never would.
+        # shutdown() interrupts the blocked accept immediately.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
@@ -261,6 +360,7 @@ class Server:
         with self._conns_lock:
             conns = list(self._conns)
         for conn in conns:
+            # same reasoning: serve threads are blocked in recv(2)
             try:
                 conn.shutdown(socket.SHUT_RDWR)
             except OSError:
@@ -293,6 +393,7 @@ class RemoteHandle:
         self._lock = threading.Lock()
         self._rpc_metrics: dict = {}
         self._m_retries = None
+        self._m_reconnects = None
 
     def _retries_metric(self):
         # Lazy like _rpc_metrics: handles unpickle before the child's
@@ -303,6 +404,16 @@ class RemoteHandle:
             self._m_retries = _telemetry.counter(
                 f"courier/client/{self._name or 'anon'}/retries")
         return self._m_retries
+
+    def _reconnects_metric(self):
+        if self._m_reconnects is None:
+            if not _telemetry.enabled():
+                return None
+            self._m_reconnects = (
+                _telemetry.counter("courier/reconnects"),
+                _telemetry.counter(
+                    f"courier/client/{self._name or 'anon'}/reconnects"))
+        return self._m_reconnects
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -327,7 +438,7 @@ class RemoteHandle:
                 sock.close()
             except OSError:
                 pass
-            raise ConnectionRefusedError(
+            raise AuthenticationError(
                 f"courier authentication with {self._name!r} @ "
                 f"{self._address} failed (missing/wrong authkey)") from e
         return sock
@@ -340,55 +451,110 @@ class RemoteHandle:
                 pass
             self._sock = None
 
+    def _reconnect_backoff(self, cause: BaseException, reconnects: int,
+                           deadline: Optional[float],
+                           cfg: RetryConfig) -> float:
+        """Sleep before the next reconnect attempt, or raise
+        ``ServiceUnavailable`` once the per-call deadline has passed.
+        Returns the deadline (set lazily at the first failure, so healthy
+        calls never pay a clock read)."""
+        now = time.monotonic()
+        if deadline is None:
+            deadline = now + cfg.reconnect_deadline_s
+        if now >= deadline:
+            raise ServiceUnavailable(
+                f"service {self._name!r} @ {self._address} unreachable for "
+                f"{cfg.reconnect_deadline_s:.1f}s "
+                f"({reconnects} reconnect attempts): "
+                f"{type(cause).__name__}: {cause}") from cause
+        time.sleep(min(cfg.backoff.delay(reconnects),
+                       max(deadline - now, 0.0)))
+        return deadline
+
     def call(self, method: str, *args, **kwargs):
         metrics = _rpc_metrics(self._rpc_metrics, "client",
                                self._name, method)
         t0 = time.monotonic() if metrics else 0.0
         idempotent = method in IDEMPOTENT_METHODS
-        max_attempts = 3 if idempotent else 2
-        retries = 0
+        cfg = _RETRY
+        retries = 0      # response-lost retries (idempotent methods only)
+        reconnects = 0   # pre-delivery failures retried under the deadline
+        deadline = None
         with self._lock:
-            # A stale cached socket may fail on SEND: reconnect once and
-            # retransmit — the request never reached the server.  After a
-            # send went through there is NO retry for general methods: the
-            # server may already have executed the call (insert/increment/
-            # append are not idempotent), so a lost response must surface
-            # as an error rather than silently run the method twice.
+            # Failures BEFORE the request was delivered — connect refused/
+            # reset (a service's restart window), send failure (sendall
+            # raised, so the full frame never left this process), or an
+            # injected chaos drop — are safe to retry for ANY method: the
+            # server cannot have executed the call.  These reconnect with
+            # jittered backoff until ``reconnect_deadline_s``, then raise
+            # ``ServiceUnavailable``.  Auth failures fast-fail (a wrong key
+            # is not transient).  After a send went through there is NO
+            # retry for general methods: the server may already have run
+            # the (non-idempotent) call, so a lost response must surface as
+            # an error rather than silently run the method twice.
             # IDEMPOTENT_METHODS relax this: their recv is bounded by a
-            # timeout (half-open peers) and retried on a fresh connection.
-            for attempt in range(max_attempts):
-                last = attempt == max_attempts - 1
+            # timeout (half-open peers) and retried on a fresh connection,
+            # up to ``max_attempts``.
+            while True:
                 try:
                     if _RPC_CHAOS is not None:
                         _RPC_CHAOS.before_send()
-                except ConnectionError:
-                    # injected drop: nothing was sent, any call may retry
+                except ConnectionError as e:
                     self._drop_socket()
-                    if last:
-                        raise
-                    retries += 1
+                    deadline = self._reconnect_backoff(
+                        e, reconnects, deadline, cfg)
+                    reconnects += 1
                     continue
-                fresh = self._sock is None
-                if fresh:
-                    self._sock = self._connect()
+                try:
+                    if self._sock is None:
+                        self._sock = self._connect()
+                except AuthenticationError:
+                    raise
+                except (ConnectionError, OSError) as e:
+                    deadline = self._reconnect_backoff(
+                        e, reconnects, deadline, cfg)
+                    reconnects += 1
+                    continue
                 try:
                     bytes_out = _send_frame(self._sock,
                                             (method, args, kwargs))
-                except (ConnectionError, OSError):
+                except (ConnectionError, OSError) as e:
                     self._drop_socket()
-                    if fresh or last:
-                        raise
-                    retries += 1
+                    deadline = self._reconnect_backoff(
+                        e, reconnects, deadline, cfg)
+                    reconnects += 1
                     continue
                 if idempotent:
                     self._sock.settimeout(IDEMPOTENT_RECV_TIMEOUT_S)
                 try:
                     (status, payload), bytes_in = _recv_frame(self._sock)
-                except (CourierClosed, ConnectionError, OSError):
+                except (CourierClosed, ConnectionError, OSError) as e:
                     self._drop_socket()
-                    if not idempotent or last:
-                        raise
+                    if getattr(e, "no_response", False):
+                        # Keep-alive race: the connection died (clean EOF
+                        # or reset) before a single response byte.  Either
+                        # the frame only made it into the local TCP buffer
+                        # of a connection whose peer was already gone, or a
+                        # dying server accepted + authed and then shut the
+                        # connection without dispatching — in both cases
+                        # the handler never responded, so treat it like a
+                        # pre-delivery failure and reconnect, for ANY
+                        # method.  (The residual window — server executed
+                        # the call, then died before writing byte one of
+                        # the response — is exactly the state a failover
+                        # restore rolls back to its last snapshot, so
+                        # retrying is the correct semantics there too.)
+                        # Mid-response failures and timeouts keep the
+                        # strict rule below: the server saw the call and
+                        # may have run it to completion.
+                        deadline = self._reconnect_backoff(
+                            e, reconnects, deadline, cfg)
+                        reconnects += 1
+                        continue
                     retries += 1
+                    if not idempotent or retries >= cfg.max_attempts:
+                        raise
+                    time.sleep(cfg.backoff.delay(retries - 1))
                     continue
                 if idempotent:
                     self._sock.settimeout(None)
@@ -397,6 +563,11 @@ class RemoteHandle:
             m_retries = self._retries_metric()
             if m_retries:
                 m_retries.inc(retries)
+        if reconnects:
+            m_reconnects = self._reconnects_metric()
+            if m_reconnects:
+                for m in m_reconnects:
+                    m.inc(reconnects)
         if metrics:
             latency, sent, received = metrics
             latency.observe((time.monotonic() - t0) * 1000.0)

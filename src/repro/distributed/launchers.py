@@ -311,8 +311,13 @@ def _child_main(node_name, payload, control_pipe, error_queue, restarts=0):
     the elastic supervisor; it is published via ``RESTARTS_ENV`` before the
     node is built so chaos kill schedules can disarm after ``max_kills``.
     """
+    import faulthandler
     import os
+    import signal
     import sys
+    # SIGUSR1 dumps every thread's stack to stderr — the only way to see
+    # where a live worker is stuck from outside (hangs, chaos debugging).
+    faulthandler.register(signal.SIGUSR1, all_threads=True)
     os.environ[RESTARTS_ENV] = str(restarts)
     flags = {"stop": False, "user": False}
     try:
@@ -371,13 +376,24 @@ class MultiprocessLauncher(LauncherBase):
         self._respawn_at: Dict[str, float] = {}
         self._stashed: Dict[str, BaseException] = {}
         self._m_restarts = None
+        # Parent-side failover for role="service" nodes (periodic snapshot,
+        # kill classification, budgeted restore + courier re-bind); started
+        # by launch() when the program carries a RestartPolicy.
+        self._watchdog = None
 
     def restart_stats(self) -> Dict:
         """Supervisor bookkeeping: per-worker restart counts and the
-        classification of every death observed."""
-        return {"restarts": dict(self._restarts),
-                "exit_kinds": {k: list(v)
-                               for k, v in self._exit_kinds.items()}}
+        classification of every death observed, plus the service watchdog's
+        own restore accounting."""
+        stats = {"restarts": dict(self._restarts),
+                 "exit_kinds": {k: list(v)
+                                for k, v in self._exit_kinds.items()}}
+        if self._watchdog is not None:
+            stats.update(self._watchdog.stats())
+        else:
+            stats["service_restarts"] = {}
+            stats["service_exit_kinds"] = {}
+        return stats
 
     def launch(self) -> "MultiprocessLauncher":
         try:
@@ -390,6 +406,20 @@ class MultiprocessLauncher(LauncherBase):
                 if node.role == "service" \
                         and self._runs_in_parent_thread(node):
                     self._start_parent_thread(node)
+            # 2b. with a RestartPolicy, services get failover too: the
+            # watchdog snapshots every recoverable service and restores
+            # killed ones at the same courier address.
+            if self._policy is not None:
+                from repro.resilience.failover import ServiceWatchdog
+                self._watchdog = ServiceWatchdog(
+                    self, self._policy,
+                    chaos=getattr(self.program, "chaos_policy", None),
+                    snapshot_period_s=getattr(
+                        self.program, "service_snapshot_period_s", 0.5))
+                for node in self.program.nodes:
+                    if node.role == "service":
+                        self._watchdog.register(node.name, node.instance)
+                self._watchdog.start()
             # 3. workers spawn as OS processes; pickling converts Handles.
             for node in self.program.nodes:
                 if not node.is_worker:
@@ -563,6 +593,11 @@ class MultiprocessLauncher(LauncherBase):
 
     # ---------------------------------------------------------------- stop
     def _initiate_stop(self):
+        # the watchdog must not restore services into a run that is tearing
+        # down (request only — joining here could self-deadlock when the
+        # stop originates from the watchdog's own error path)
+        if self._watchdog is not None:
+            self._watchdog.request_stop()
         # order matters: children must see the stop (and its user/fail-fast
         # flavor) before any parent-side table wakes them with a "stopped"
         # rate-limiter error.  (list(): the monitor thread may be swapping
@@ -577,6 +612,8 @@ class MultiprocessLauncher(LauncherBase):
     # ---------------------------------------------------------------- join
     def _join_runners(self, deadline: Optional[float]):
         super()._join_runners(deadline)
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=5)
         for proc in list(self.processes.values()):
             remaining = (None if deadline is None
                          else max(deadline - time.time(), 0))

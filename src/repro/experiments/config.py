@@ -95,9 +95,26 @@ class ExperimentConfig:
         respawned with exponential backoff under a per-worker budget,
         instead of failing the run.  None = fail-fast (the default).
     chaos: a ``repro.resilience.ChaosPolicy`` injecting seeded faults
-        (worker kills after N steps, courier RPC delay/drop) into
-        distributed runs — the harness the chaos acceptance test drives.
-        None = no injection.
+        (worker kills after N steps, service kills by activity, courier
+        RPC delay/drop) into distributed runs — the harness the chaos
+        acceptance tests drive.  None = no injection.
+    rpc_retry: a ``repro.distributed.RetryConfig`` tuning courier
+        client-side retry/backoff — how long calls reconnect through a
+        service's restart window before raising ``ServiceUnavailable``,
+        and how many attempts idempotent methods get when a response is
+        lost.  Installed process-globally in every worker.  None = the
+        courier defaults.
+    barrier_timeout_s: parameter-server quorum mode — a round whose first
+        contribution is this old merges whatever >= ``min_quorum``
+        replicas delivered instead of stalling on stragglers.  None (the
+        default) keeps the strict all-or-nothing barrier.
+    min_quorum: minimum replica contributions for a timed-out round to
+        merge (None with ``barrier_timeout_s`` set = 1).  Requires
+        ``barrier_timeout_s``.
+    service_snapshot_period_s: cadence at which the service watchdog
+        snapshots recoverable services for failover (None = 0.5s).  Only
+        meaningful with ``restart_policy`` under the multiprocess
+        launcher.
     """
 
     builder_factory: BuilderFactory
@@ -125,6 +142,10 @@ class ExperimentConfig:
     resume: bool = False
     restart_policy: Optional[Any] = None
     chaos: Optional[Any] = None
+    rpc_retry: Optional[Any] = None
+    barrier_timeout_s: Optional[float] = None
+    min_quorum: Optional[int] = None
+    service_snapshot_period_s: Optional[float] = None
 
     def __post_init__(self):
         if self.num_episodes < 1:
@@ -183,6 +204,26 @@ class ExperimentConfig:
             if not isinstance(self.chaos, ChaosPolicy):
                 raise ValueError(f"chaos must be a ChaosPolicy, "
                                  f"got {self.chaos!r}")
+        if self.rpc_retry is not None:
+            from repro.distributed import RetryConfig
+            if not isinstance(self.rpc_retry, RetryConfig):
+                raise ValueError(f"rpc_retry must be a RetryConfig, "
+                                 f"got {self.rpc_retry!r}")
+        if self.barrier_timeout_s is not None and self.barrier_timeout_s <= 0:
+            raise ValueError(f"barrier_timeout_s must be > 0, "
+                             f"got {self.barrier_timeout_s}")
+        if self.min_quorum is not None:
+            if self.barrier_timeout_s is None:
+                raise ValueError(
+                    "min_quorum requires barrier_timeout_s (a round only "
+                    "closes below full strength when the barrier times out)")
+            if self.min_quorum < 1:
+                raise ValueError(f"min_quorum must be >= 1, "
+                                 f"got {self.min_quorum}")
+        if self.service_snapshot_period_s is not None \
+                and self.service_snapshot_period_s <= 0:
+            raise ValueError(f"service_snapshot_period_s must be > 0, "
+                             f"got {self.service_snapshot_period_s}")
 
 
 @dataclasses.dataclass

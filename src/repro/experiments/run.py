@@ -279,6 +279,11 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   telemetry_jsonl=config.telemetry_jsonl,
                                   restart_policy=config.restart_policy,
                                   chaos=config.chaos,
+                                  rpc_retry=config.rpc_retry,
+                                  barrier_timeout_s=config.barrier_timeout_s,
+                                  min_quorum=config.min_quorum,
+                                  service_snapshot_period_s=(
+                                      config.service_snapshot_period_s),
                                   restore=restore)
     last_ckpt_step: Optional[int] = None
 

@@ -35,7 +35,6 @@ Components:
 """
 from __future__ import annotations
 
-import itertools
 import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -92,26 +91,63 @@ class ParameterServer:
     keeps its own state and exits) — a dead or stopping replica can never
     wedge the others in a half-filled round forever only because fail-fast
     stop reaches this object like any other node instance.
+
+    Quorum mode (``barrier_timeout_s`` + ``min_quorum``) relaxes the
+    all-or-nothing barrier for elastic fleets: once a round's first
+    contribution is ``barrier_timeout_s`` old, any waiter merges the >=
+    ``min_quorum`` states that DID arrive, so a straggling, killed, or
+    restoring replica delays a round by at most the timeout instead of
+    stalling training forever.  Late replicas fold into the next round and
+    receive its merged state.  Defaults leave the strict barrier exactly
+    as before.
     """
 
-    def __init__(self, num_replicas: int, average_period: int):
+    def __init__(self, num_replicas: int, average_period: int,
+                 barrier_timeout_s: Optional[float] = None,
+                 min_quorum: Optional[int] = None):
         if num_replicas < 1:
             raise ValueError(
                 f"num_replicas must be >= 1, got {num_replicas}")
         if average_period < 1:
             raise ValueError(
                 f"average_period must be >= 1, got {average_period}")
+        if barrier_timeout_s is not None and barrier_timeout_s <= 0:
+            raise ValueError(f"barrier_timeout_s must be > 0, "
+                             f"got {barrier_timeout_s}")
+        if min_quorum is not None:
+            if barrier_timeout_s is None:
+                raise ValueError(
+                    "min_quorum without barrier_timeout_s is meaningless: "
+                    "a round only closes early when the barrier can time "
+                    "out")
+            if not 1 <= min_quorum <= num_replicas:
+                raise ValueError(
+                    f"min_quorum must be in [1, {num_replicas}], "
+                    f"got {min_quorum}")
         self.num_replicas = num_replicas
         self.average_period = average_period
+        # Quorum mode (both None by default — the all-or-nothing barrier is
+        # unchanged): a round's deadline starts at its FIRST contribution;
+        # past the deadline, any waiter holding >= min_quorum contributions
+        # merges what arrived instead of stalling on stragglers.  Late or
+        # restored replicas adopt the latest merged state on their next
+        # sync rather than deadlocking the round.
+        self.barrier_timeout_s = barrier_timeout_s
+        self.min_quorum = (min_quorum if min_quorum is not None
+                           else (1 if barrier_timeout_s is not None
+                                 else None))
         self._cond = threading.Condition()
         self._pending: Dict[int, Any] = {}
         self._merged: Any = None
         self._rounds = 0
+        self._quorum_merges = 0
+        self._round_deadline: Optional[float] = None
         self._stopped = False
         # Lazy per-replica barrier-wait histograms: replicas first call
         # ``sync`` from their own worker threads/processes, well after the
         # run entrypoint configured telemetry.
         self._m_barrier: Dict[int, Any] = {}
+        self._m_timeouts = None
         _telemetry.probe("learner/param_server", self.stats)
 
     @property
@@ -164,31 +200,61 @@ class ParameterServer:
                 return None
             round_at_entry = self._rounds
             self._pending[replica_id] = state
+            if self.barrier_timeout_s is not None \
+                    and self._round_deadline is None:
+                self._round_deadline = (time.monotonic()
+                                        + self.barrier_timeout_s)
             if len(self._pending) == self.num_replicas:
-                merged = average_states(
-                    [self._pending[i] for i in sorted(self._pending)])
-                self._pending.clear()
-                self._merged = merged
-                self._rounds += 1
-                self._cond.notify_all()
-                return merged
+                return self._merge_pending_locked()
             while self._rounds == round_at_entry and not self._stopped:
-                self._cond.wait(0.1)
+                if self._quorum_due_locked():
+                    return self._merge_pending_locked(timed_out=True)
+                self._cond.wait(0.05)
             if self._rounds == round_at_entry:   # woken by stop()
                 return None
             return self._merged
+
+    def _quorum_due_locked(self):
+        """True when the round's deadline has passed with >= min_quorum
+        contributions — the waiter that observes this performs the merge."""
+        return (self._round_deadline is not None
+                and time.monotonic() >= self._round_deadline
+                and len(self._pending) >= self.min_quorum)
+
+    def _merge_pending_locked(self, timed_out: bool = False):
+        merged = average_states(
+            [self._pending[i] for i in sorted(self._pending)])
+        self._pending.clear()
+        self._round_deadline = None
+        self._merged = merged
+        self._rounds += 1
+        if timed_out:
+            self._quorum_merges += 1
+            if self._m_timeouts is None and _telemetry.enabled():
+                self._m_timeouts = _telemetry.counter(
+                    "learner/param_server/barrier_timeouts")
+            if self._m_timeouts:
+                self._m_timeouts.inc()
+        self._cond.notify_all()
+        return merged
 
     def stop(self):
         with self._cond:
             self._stopped = True
             self._pending.clear()
+            self._round_deadline = None
             self._cond.notify_all()
 
     def stats(self) -> Dict[str, Any]:
         with self._cond:
-            return {"num_replicas": self.num_replicas,
-                    "average_period": self.average_period,
-                    "rounds": self._rounds}
+            stats = {"num_replicas": self.num_replicas,
+                     "average_period": self.average_period,
+                     "rounds": self._rounds}
+            if self.barrier_timeout_s is not None:
+                stats["barrier_timeout_s"] = self.barrier_timeout_s
+                stats["min_quorum"] = self.min_quorum
+                stats["quorum_merges"] = self._quorum_merges
+            return stats
 
 
 class MultiLearner:
@@ -329,17 +395,34 @@ class LearnerReplicaWorker:
         self.shard = shard
         self.steps_taken = 0
         self._stop = threading.Event()
+        self._down = threading.Event()
+        self._m_degraded = None
 
     def run(self):
         local = 0
         try:
-            for i in itertools.count():
+            while True:
                 if self._stop.is_set():
                     return
-                if self.max_steps is not None and i >= self.max_steps:
+                if self._down.is_set():
+                    # simulated death (service failover): pause until the
+                    # watchdog restores this replica's state and marks it up
+                    time.sleep(0.02)
+                    continue
+                if self.max_steps is not None \
+                        and self.steps_taken >= self.max_steps:
                     return
                 try:
                     self.learner.step()
+                except ConnectionError:
+                    if self._stop.is_set():
+                        return
+                    # this replica's replay shard is in its restart window:
+                    # degrade (skip the step) instead of dying and burning
+                    # a restart budget that belongs to real failures
+                    self._degraded_metric_inc()
+                    time.sleep(0.05)
+                    continue
                 except Exception:
                     if self._stop.is_set():
                         return
@@ -349,8 +432,14 @@ class LearnerReplicaWorker:
                 if self.param_server is not None \
                         and local >= self.average_period:
                     local = 0
-                    merged = self.param_server.sync(self.replica_id,
-                                                    self.learner.state)
+                    try:
+                        merged = self.param_server.sync(self.replica_id,
+                                                        self.learner.state)
+                    except ConnectionError:
+                        if self._stop.is_set():
+                            return
+                        self._degraded_metric_inc()
+                        continue   # keep local state; rejoin next period
                     if merged is None:   # server stopped mid-round
                         return
                     self.learner.state = merged
@@ -363,6 +452,35 @@ class LearnerReplicaWorker:
         # dataset's stop event, its next() raises the "stopped" timeout,
         # and the run loop exits through the stop check above.
         self._close_dataset()
+
+    # --------------------------------------------------- service failover
+    def mark_down(self):
+        """Simulate abrupt replica death: the run loop pauses (no SGD, no
+        rendezvous — with quorum averaging the other replicas keep merging
+        without it) until the watchdog restores and ``mark_up``s it."""
+        self._down.set()
+
+    def mark_up(self):
+        self._down.clear()
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Snapshot for service failover: the learner pytree (replicas swap
+        it atomically, so a concurrent read is a consistent state) plus the
+        step count the restart accounting resumes from."""
+        return {"learner_state": self.learner.state,
+                "steps_taken": self.steps_taken}
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        self.learner.state = state["learner_state"]
+        self.steps_taken = int(state["steps_taken"])
+
+    def _degraded_metric_inc(self):
+        if self._m_degraded is None:
+            if not _telemetry.enabled():
+                return
+            self._m_degraded = _telemetry.counter(
+                f"resilience/learner_replica_{self.replica_id}/skipped_steps")
+        self._m_degraded.inc()
 
     def get_variables(self, names: Sequence[str] = ()):
         return self.learner.get_variables(names)

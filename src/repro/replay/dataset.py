@@ -6,7 +6,7 @@ probabilities needed for prioritized replay importance weighting.
 """
 from __future__ import annotations
 
-from typing import Any, Iterator, NamedTuple
+from typing import Any, Iterator, NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -36,10 +36,33 @@ def batch_from_samples(sampled) -> ReplaySample:
     return ReplaySample(SampleInfo(keys, probs), _stack(items))
 
 
+class _TableIterator:
+    """The infinite sample stream as a plain-class iterator, NOT a
+    generator: an exception escaping a generator's frame (e.g. a transient
+    ``ServiceUnavailable`` while the table's service restarts) finalizes
+    the generator, and every later ``next()`` returns ``StopIteration`` —
+    which learner run loops read as clean end-of-stream and exit on.  A
+    class iterator has no frame to finalize: the exception propagates to
+    the caller and the stream resumes on the next ``next()``."""
+
+    __slots__ = ("_table", "_batch_size", "_timeout")
+
+    def __init__(self, table, batch_size: int, timeout: Optional[float]):
+        self._table = table
+        self._batch_size = batch_size
+        self._timeout = timeout
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> ReplaySample:
+        return batch_from_samples(
+            self._table.sample(self._batch_size, timeout=self._timeout))
+
+
 def as_iterator(table: Table, batch_size: int,
                 timeout: float = None) -> Iterator[ReplaySample]:
-    while True:
-        yield batch_from_samples(table.sample(batch_size, timeout=timeout))
+    return _TableIterator(table, batch_size, timeout)
 
 
 def dataset_from_list(items, batch_size: int, *, seed: int = 0,

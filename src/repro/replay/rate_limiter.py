@@ -13,11 +13,17 @@ and one or more learner threads simultaneously.
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import Callable, Optional
 
 
 class RateLimiterTimeout(RuntimeError):
     pass
+
+
+class RateLimiterInterrupt(RuntimeError):
+    """A blocked waiter was woken by its ``interrupt`` predicate (e.g. the
+    owning table was marked down for simulated failover) — nothing was
+    counted; the caller decides whether to surface an error or re-wait."""
 
 
 class RateLimiter:
@@ -67,11 +73,25 @@ class RateLimiter:
         return self._inserts >= self.min_size_to_sample
 
     # -- public api ----------------------------------------------------
-    def await_can_insert(self, timeout: Optional[float] = None):
+    def notify_waiters(self):
+        """Wake every blocked waiter so it re-evaluates its predicate —
+        used by ``interrupt`` sources (they flip their flag, then call
+        this; without it a parked waiter would sleep through the event)."""
+        with self._lock:
+            self._lock.notify_all()
+
+    def await_can_insert(self, timeout: Optional[float] = None,
+                         interrupt: Optional[Callable[[], bool]] = None):
+        def _interrupted():
+            return interrupt is not None and interrupt()
+
         with self._lock:
             if not self._lock.wait_for(
-                    lambda: self._can_insert() or self._stopped, timeout):
+                    lambda: self._can_insert() or self._stopped
+                    or _interrupted(), timeout):
                 raise RateLimiterTimeout("insert blocked past timeout")
+            if _interrupted():
+                raise RateLimiterInterrupt("insert waiter interrupted")
             if self._stopped and not self._can_insert():
                 raise RateLimiterTimeout("stopped")
             self._inserts += 1
@@ -84,11 +104,18 @@ class RateLimiter:
             self._samples -= 1
             self._lock.notify_all()
 
-    def await_can_sample(self, timeout: Optional[float] = None):
+    def await_can_sample(self, timeout: Optional[float] = None,
+                         interrupt: Optional[Callable[[], bool]] = None):
+        def _interrupted():
+            return interrupt is not None and interrupt()
+
         with self._lock:
             if not self._lock.wait_for(
-                    lambda: self._can_sample() or self._stopped, timeout):
+                    lambda: self._can_sample() or self._stopped
+                    or _interrupted(), timeout):
                 raise RateLimiterTimeout("sample blocked past timeout")
+            if _interrupted():
+                raise RateLimiterInterrupt("sample waiter interrupted")
             if self._stopped and not self._can_sample():
                 raise RateLimiterTimeout("stopped")
             self._samples += 1

@@ -14,8 +14,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.replay.rate_limiter import (RateLimiter, RateLimiterTimeout,
-                                       MinSize)
+from repro.replay.rate_limiter import (RateLimiter, RateLimiterInterrupt,
+                                       RateLimiterTimeout, MinSize)
 from repro.replay.selectors import Selector, Uniform
 from repro.telemetry import registry as _telemetry
 
@@ -45,11 +45,48 @@ class Table:
         # O(n) per operation at full capacity.
         self._order: "OrderedDict[int, None]" = OrderedDict()
         self._next_key = 0
+        # Simulated-death flag (repro.resilience.failover): while set, the
+        # data path refuses calls so in-parent clients see the same outage
+        # remote clients get from the torn-down courier server.
+        self._down = threading.Event()
         # Block-time metrics are created on FIRST use, not here:
         # ``ShardedReplay.from_factory`` renames its shard tables after
         # construction, and the metric name must carry the final name.
         self._m_insert_block = None
         self._m_sample_block = None
+
+    # --------------------------------------------------- service failover
+    def mark_down(self):
+        """Simulate abrupt service death: insert/sample/update_priorities
+        raise ``ServiceUnavailable`` until ``mark_up``.  Metadata reads
+        (``size``/``state_dict``) stay available — the failover watchdog
+        and telemetry probes still need them.  Waiters already parked in
+        the rate limiter are woken so they fail too, instead of sleeping
+        through the outage holding the SPI coupling wedged."""
+        self._down.set()
+        self.rate_limiter.notify_waiters()
+
+    def mark_up(self):
+        self._down.clear()
+        self.rate_limiter.notify_waiters()
+
+    def _await_limiter(self, awaiter, timeout):
+        """Run a limiter wait that fails over: while the table is down the
+        wait raises ``ServiceUnavailable`` (via the interrupt hook) rather
+        than parking a thread through the outage; a spurious wake-up that
+        raced ``mark_up`` simply re-waits."""
+        while True:
+            try:
+                return awaiter(timeout, interrupt=self._down.is_set)
+            except RateLimiterInterrupt:
+                self._check_up()
+
+    def _check_up(self):
+        if self._down.is_set():
+            from repro.distributed.courier import ServiceUnavailable
+            raise ServiceUnavailable(
+                f"replay table {self.name!r} is down (simulated failure; "
+                f"awaiting failover)")
 
     def _block_metrics(self):
         if self._m_insert_block is None:
@@ -66,13 +103,14 @@ class Table:
     # ------------------------------------------------------------ insert
     def insert(self, data: Any, priority: float = 1.0,
                timeout: Optional[float] = None) -> int:
+        self._check_up()
         m_insert, _ = self._block_metrics()
         if m_insert:
             t0 = time.monotonic()
-            self.rate_limiter.await_can_insert(timeout)
+            self._await_limiter(self.rate_limiter.await_can_insert, timeout)
             m_insert.observe((time.monotonic() - t0) * 1000.0)
         else:
-            self.rate_limiter.await_can_insert(timeout)
+            self._await_limiter(self.rate_limiter.await_can_insert, timeout)
         with self._lock:
             key = self._next_key
             self._next_key += 1
@@ -89,19 +127,23 @@ class Table:
     def sample(self, batch_size: int = 1,
                timeout: Optional[float] = None) -> List[Tuple[Item, float]]:
         """Returns [(item, importance_weight_probability), ...]."""
+        self._check_up()
         out = []
         _, m_sample = self._block_metrics()
         deadline = None if timeout is None else time.time() + timeout
         for _ in range(batch_size):
             while True:
+                self._check_up()
                 remaining = (None if deadline is None
                              else max(deadline - time.time(), 0.0))
                 if m_sample:
                     t0 = time.monotonic()
-                    self.rate_limiter.await_can_sample(remaining)
+                    self._await_limiter(self.rate_limiter.await_can_sample,
+                                        remaining)
                     m_sample.observe((time.monotonic() - t0) * 1000.0)
                 else:
-                    self.rate_limiter.await_can_sample(remaining)
+                    self._await_limiter(self.rate_limiter.await_can_sample,
+                                        remaining)
                 with self._lock:
                     try:
                         key, prob = self.selector.sample()
@@ -124,6 +166,7 @@ class Table:
         return out
 
     def update_priorities(self, keys: Sequence[int], priorities: Sequence[float]):
+        self._check_up()
         with self._lock:
             for k, p in zip(keys, priorities):
                 if k in self._items:

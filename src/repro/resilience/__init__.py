@@ -1,6 +1,6 @@
 """Fault tolerance for distributed runs (§4.2 of the paper).
 
-Three pillars:
+Four pillars:
 
 - ``RunCheckpointer`` — a consistent, crash-safe snapshot of an entire run
   (learner pytree, replay contents, counter totals, RNG/cadence streams),
@@ -9,11 +9,20 @@ Three pillars:
   contract: worker deaths are classified (crash / preempted / shutdown)
   and ``role="worker"`` replicas respawn with exponential backoff under a
   max-restarts budget.
+- ``ServiceWatchdog`` (``failover``) — the same elasticity for stateful
+  ``role="service"`` nodes: periodic snapshots of every recoverable
+  service, budgeted restore on a kill, and a courier re-bind at the same
+  address so the fleet's pickled handles reconnect transparently.
 - ``ChaosPolicy`` — seeded fault injection (kill-after-N-steps workers,
-  RPC delay/drop at the courier layer) for acceptance-testing the above.
+  activity-triggered service kills, RPC delay/drop at the courier layer)
+  for acceptance-testing the above.
 """
 from repro.resilience.chaos import (ChaosPolicy,  # noqa: F401
-                                    KillSchedule, RPCChaosInjector)
+                                    KillSchedule, RPCChaosInjector,
+                                    ServiceKillSchedule)
+from repro.resilience.failover import (ServiceWatchdog,  # noqa: F401
+                                       atomic_pickle, is_recoverable,
+                                       service_activity, supports_down)
 from repro.resilience.run_checkpoint import (RunCheckpointer,  # noqa: F401
                                              RunSnapshot)
 from repro.resilience.supervisor import (CRASH, PREEMPTED,  # noqa: F401

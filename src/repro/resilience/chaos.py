@@ -8,6 +8,11 @@ worker node at assembly time:
   hard-kills the process (``os._exit``) after N environment steps — the
   same failure surface as an OOM kill or a lost machine, which is exactly
   what the elastic supervisor must absorb.
+- ``service_schedule_for(node_name)`` targets ``role="service"`` nodes
+  (replay shards, learner replicas, the counter): the parent-side
+  ``ServiceWatchdog`` polls the target's activity counter and simulates
+  the death — mark_down + courier-server teardown — then restores it from
+  its last snapshot under the same ``RestartPolicy`` budget.
 - ``rpc_injector()`` yields an ``RPCChaosInjector`` installed at the
   courier layer inside the worker: per-call seeded delays and simulated
   connection drops, exercised *before* the request is sent so a dropped
@@ -71,6 +76,28 @@ class KillSchedule:
             # A real kill, not an exception: no cleanup, no error-queue
             # report — the supervisor must notice the silent death.
             os._exit(self.exit_code)
+
+
+class ServiceKillSchedule:
+    """Kill a parent-resident service once its activity passes a threshold.
+
+    Services have no process of their own and no ``observe()`` hook to
+    wrap, so the trigger is the service's OWN progress counter
+    (``repro.resilience.failover.service_activity``: replay inserts +
+    samples, learner-replica steps, counter totals) polled by the
+    ``ServiceWatchdog``, which then simulates the death (mark_down +
+    courier-server teardown) and the budgeted restore.
+    """
+
+    def __init__(self, node: str, kill_step: int, exit_code: int,
+                 max_kills: int):
+        if kill_step < 1:
+            raise ValueError("kill_step must be >= 1")
+        self.node = node
+        self.kill_step = int(kill_step)
+        self.exit_code = int(exit_code)
+        self.max_kills = int(max_kills)
+        self.fired = 0  # kills delivered (the watchdog's disarm counter)
 
 
 class _ChaosActor:
@@ -162,6 +189,19 @@ class ChaosPolicy:
             jitter = rng.randint(0, self.kill_jitter_steps)
         return KillSchedule(node, self.kill_after_steps + jitter,
                             self.kill_exit_code, self.max_kills)
+
+    def service_schedule_for(self, node: str) -> Optional[ServiceKillSchedule]:
+        """Like ``schedule_for`` but for ``role="service"`` nodes — same
+        targeting, jitter, and budget; different delivery (watchdog-polled
+        activity instead of a wrapped actor)."""
+        if self.kill_after_steps is None or node not in self.kill_targets:
+            return None
+        jitter = 0
+        if self.kill_jitter_steps > 0:
+            rng = random.Random(f"{self.seed}/{node}")
+            jitter = rng.randint(0, self.kill_jitter_steps)
+        return ServiceKillSchedule(node, self.kill_after_steps + jitter,
+                                   self.kill_exit_code, self.max_kills)
 
     def rpc_injector(self) -> Optional[RPCChaosInjector]:
         if self.rpc_delay_ms <= 0 and self.rpc_drop_rate <= 0:

@@ -4,9 +4,14 @@ The ``MultiprocessLauncher`` monitor consults this module when a child
 process dies: the exit is classified, and — when a ``RestartPolicy`` is
 attached to the program and the dead node is a ``role="worker"`` replica —
 the worker is respawned with exponential backoff instead of failing the
-whole run.  Services (learner, replay, inference, telemetry hub) are NOT
-restartable: they hold state the workers depend on, so their death stays
-fail-fast.
+whole run.  Stateful ``role="service"`` nodes (replay shards, counter,
+learner replicas) are covered by the same policy through
+``repro.resilience.failover.ServiceWatchdog``: their deaths are classified
+with the same ``classify_exit`` and charged against the same per-node
+budget, but a respawn RESTORES the service's periodic snapshot and
+re-binds its courier server at the same address (workers respawn fresh
+from their spawn payloads — they are stateless by design).  A service
+whose budget is exhausted stays fail-fast.
 
 Classification:
 
@@ -45,10 +50,11 @@ def classify_exit(exitcode: Optional[int], *, stopping: bool = False) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class RestartPolicy:
-    """How the supervisor respawns dead ``role="worker"`` replicas.
+    """How the supervisor respawns dead nodes (worker replicas and, via the
+    service watchdog, stateful services).
 
-    ``max_restarts`` is a PER-WORKER budget; once a worker exhausts it, its
-    next death is treated like a service death (fail-fast, run stops).
+    ``max_restarts`` is a PER-NODE budget; once a node exhausts it, its
+    next death is fail-fast (the run stops).
     Backoff for restart number k (0-based) is
     ``min(backoff_base_s * backoff_factor**k, backoff_max_s)``.
     """

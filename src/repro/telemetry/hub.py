@@ -26,6 +26,7 @@ single pusher covers them), in which case it is a no-op.
 from __future__ import annotations
 
 import json
+import sys
 import threading
 import time
 from typing import Any, Dict, Mapping, Optional
@@ -140,8 +141,13 @@ def format_report(snapshot: Mapping[str, Any]) -> str:
 class MetricsPusher:
     """Daemon thread pushing this process's registry snapshot to the hub
     every ``period_s``, with a final push on ``stop()`` so short-lived
-    workers still report.  Transient hub failures are swallowed — losing a
-    metrics push must never take down the worker."""
+    workers still report.  A dead or restarting hub must never take down
+    the worker: failed pushes are dropped, counted in
+    ``telemetry/push_failures``, and logged ONCE per outage (not per
+    period).  Because pushes carry the full cumulative snapshot and the
+    hub keeps the latest per node, the first successful push after the
+    hub returns re-registers this worker with nothing lost but the outage
+    window's sampling."""
 
     def __init__(self, hub, node: str, period_s: float = 0.5):
         self._hub = hub
@@ -151,6 +157,9 @@ class MetricsPusher:
         self._thread = threading.Thread(
             target=self._run, name=f"metrics-pusher-{node}", daemon=True)
         self._started = False
+        self.push_failures = 0
+        self._outage = False
+        self._m_failures = None
 
     def start(self) -> "MetricsPusher":
         if not self._started:
@@ -161,8 +170,23 @@ class MetricsPusher:
     def _push_once(self):
         try:
             self._hub.push(self._node, _registry.snapshot())
-        except Exception:
-            pass   # hub unreachable (e.g. shutting down): drop the push
+        except Exception as e:
+            self.push_failures += 1
+            if self._m_failures is None and _registry.enabled():
+                self._m_failures = _registry.counter("telemetry/push_failures")
+            if self._m_failures:
+                self._m_failures.inc()
+            if not self._outage:
+                self._outage = True
+                print(f"[telemetry] {self._node}: hub push failed "
+                      f"({type(e).__name__}: {e}) — dropping pushes until "
+                      f"the hub returns", file=sys.stderr, flush=True)
+            return
+        if self._outage:
+            self._outage = False
+            print(f"[telemetry] {self._node}: hub reachable again after "
+                  f"{self.push_failures} dropped pushes — re-registered",
+                  file=sys.stderr, flush=True)
 
     def _run(self):
         while not self._stop_event.wait(self._period_s):

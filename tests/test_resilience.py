@@ -592,3 +592,492 @@ def test_chaos_acceptance_kill_actor_still_learns():
     # learning: greedy eval beats the random-policy floor on Catch
     assert result.final_eval_return is not None
     assert result.final_eval_return > -0.6
+
+
+# ========================================== PR 9: jittered backoff / retry
+def test_backoff_policy_deterministic_when_unjittered():
+    from repro.distributed import BackoffPolicy
+    policy = BackoffPolicy(base_s=0.1, factor=2.0, max_s=0.5, jitter=0.0)
+    assert [policy.delay(a) for a in range(4)] == [0.1, 0.2, 0.4, 0.5]
+
+
+def test_backoff_policy_jitter_stays_in_band():
+    import random
+
+    from repro.distributed import BackoffPolicy
+    policy = BackoffPolicy(base_s=0.1, factor=2.0, max_s=1.0, jitter=0.5)
+    rng = random.Random(0)
+    for attempt in range(5):
+        full = min(0.1 * 2.0 ** attempt, 1.0)
+        for _ in range(20):
+            d = policy.delay(attempt, rng=rng)
+            assert full * 0.5 <= d <= full
+
+
+def test_backoff_policy_validation():
+    from repro.distributed import BackoffPolicy
+    with pytest.raises(ValueError):
+        BackoffPolicy(base_s=-1.0)
+    with pytest.raises(ValueError):
+        BackoffPolicy(factor=0.5)
+    with pytest.raises(ValueError):
+        BackoffPolicy(jitter=1.5)
+
+
+def test_retry_config_validation_and_install():
+    from repro.distributed import BackoffPolicy, RetryConfig, set_retry_config
+    from repro.distributed import courier
+
+    with pytest.raises(ValueError):
+        RetryConfig(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryConfig(reconnect_deadline_s=0.0)
+    with pytest.raises(TypeError):
+        RetryConfig(backoff="fast")
+
+    custom = RetryConfig(max_attempts=5, reconnect_deadline_s=9.0,
+                         backoff=BackoffPolicy(base_s=0.01))
+    try:
+        set_retry_config(custom)
+        assert courier.retry_config() is custom
+        with pytest.raises(TypeError):
+            set_retry_config("nope")
+    finally:
+        set_retry_config(None)
+    assert courier.retry_config().max_attempts == 3   # defaults restored
+
+
+# ====================================== PR 9: reconnecting courier clients
+def _serve_stats():
+    from repro.distributed import courier
+
+    class _Target:
+        def __init__(self):
+            self.values = []
+
+        def size(self):            # idempotent (IDEMPOTENT_METHODS)
+            return len(self.values)
+
+        def put(self, v):          # non-idempotent
+            self.values.append(v)
+            return v
+
+    target = _Target()
+    server, handle = courier.serve(target, interface=("size", "put"),
+                                   name="failover_stats")
+    return target, server, handle
+
+
+def test_remote_handle_raises_service_unavailable_after_deadline():
+    import socket as _socket
+
+    from repro.distributed import (BackoffPolicy, RetryConfig,
+                                   ServiceUnavailable, set_retry_config)
+    from repro.distributed.courier import RemoteHandle
+
+    probe = _socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()    # nobody listens here now
+    handle = RemoteHandle(("127.0.0.1", port), name="gone",
+                          interface=("size",))
+    set_retry_config(RetryConfig(
+        reconnect_deadline_s=0.3,
+        backoff=BackoffPolicy(base_s=0.02, max_s=0.05)))
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(ServiceUnavailable, match="unreachable"):
+            handle.size()
+        elapsed = time.monotonic() - t0
+        assert 0.25 <= elapsed < 5.0, elapsed
+    finally:
+        set_retry_config(None)
+    # ServiceUnavailable IS a ConnectionError: workers catch one type
+    assert issubclass(ServiceUnavailable, ConnectionError)
+
+
+def test_remote_handle_reconnects_through_restart_window():
+    """A server stop + same-address re-bind mid-call must be invisible to
+    the client — for an idempotent AND a non-idempotent method (the frame
+    died before a single response byte, so the handler never ran)."""
+    from repro.distributed import BackoffPolicy, RetryConfig, set_retry_config
+    from repro.distributed.courier import Server
+
+    target, server, handle = _serve_stats()
+    assert handle.put("a") == "a"     # cache a live connection
+    address, authkey = server.address, server.authkey
+    server.stop()
+
+    replacement = {}
+
+    def rebind():
+        time.sleep(0.3)
+        replacement["server"] = Server(
+            target, interface=("size", "put"), name="failover_stats",
+            host=address[0], port=address[1], authkey=authkey).start()
+
+    threading.Thread(target=rebind, daemon=True).start()
+    set_retry_config(RetryConfig(
+        reconnect_deadline_s=10.0,
+        backoff=BackoffPolicy(base_s=0.02, max_s=0.1)))
+    try:
+        assert handle.put("b") == "b"        # non-idempotent, stale socket
+        assert handle.size() == 2            # idempotent, fresh socket
+        assert target.values == ["a", "b"]   # executed exactly once
+    finally:
+        set_retry_config(None)
+        replacement["server"].stop()
+
+
+def test_auth_failure_fast_fails_without_reconnect_retries():
+    from repro.distributed import courier
+    from repro.distributed.courier import RemoteHandle
+
+    target, server, _ = _serve_stats()
+    bad = RemoteHandle(server.address, name="failover_stats",
+                       interface=("size",), authkey=b"wrong")
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="authentication"):
+            bad.size()
+        # a wrong key is not transient: no 5s reconnect window burned
+        assert time.monotonic() - t0 < 2.0
+    finally:
+        server.stop()
+
+
+# ==================================== PR 9: straggler-tolerant ParameterServer
+def _ps_state(x):
+    return {"w": np.float32(x)}
+
+
+def test_param_server_quorum_merges_on_timeout():
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(2, 1, barrier_timeout_s=0.15, min_quorum=1)
+    t0 = time.monotonic()
+    merged = ps.sync(0, _ps_state(2.0))   # replica 1 never shows up
+    elapsed = time.monotonic() - t0
+    assert merged == {"w": np.float32(2.0)}
+    assert elapsed >= 0.15
+    stats = ps.stats()
+    assert stats["rounds"] == 1
+    assert stats["quorum_merges"] == 1
+    assert stats["min_quorum"] == 1
+
+
+def test_param_server_quorum_full_round_merges_immediately():
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(2, 1, barrier_timeout_s=5.0, min_quorum=1)
+    results = {}
+
+    def contribute(rid, x):
+        results[rid] = ps.sync(rid, _ps_state(x))
+
+    t = threading.Thread(target=contribute, args=(0, 1.0))
+    t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    contribute(1, 3.0)
+    t.join(JOIN_S)
+    # the full round closed on arrival, NOT after the 5s timeout
+    assert time.monotonic() - t0 < 1.0
+    assert results[0] == results[1] == {"w": np.float32(2.0)}
+    assert ps.stats()["quorum_merges"] == 0
+
+
+def test_param_server_late_replica_joins_next_round():
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(2, 1, barrier_timeout_s=0.1, min_quorum=1)
+    assert ps.sync(0, _ps_state(1.0)) == {"w": np.float32(1.0)}
+    # the straggler arrives after its round merged without it: it opens
+    # round 2 and merges there (alone, after another timeout) instead of
+    # deadlocking
+    assert ps.sync(1, _ps_state(9.0)) == {"w": np.float32(9.0)}
+    assert ps.rounds == 2
+
+
+def test_param_server_default_barrier_still_blocks():
+    """No quorum knobs -> the strict all-or-nothing barrier of PR 6."""
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(2, 1)
+    done = threading.Event()
+
+    def first():
+        ps.sync(0, _ps_state(1.0))
+        done.set()
+
+    threading.Thread(target=first, daemon=True).start()
+    assert not done.wait(0.4), "strict barrier released with 1/2 replicas"
+    assert ps.sync(1, _ps_state(3.0)) == {"w": np.float32(2.0)}
+    assert done.wait(JOIN_S)
+    assert "quorum_merges" not in ps.stats()
+
+
+def test_param_server_quorum_validation():
+    from repro.learners import ParameterServer
+
+    with pytest.raises(ValueError, match="barrier_timeout_s"):
+        ParameterServer(2, 1, barrier_timeout_s=0.0)
+    with pytest.raises(ValueError, match="min_quorum"):
+        ParameterServer(2, 1, min_quorum=1)           # timeout missing
+    with pytest.raises(ValueError, match="min_quorum"):
+        ParameterServer(2, 1, barrier_timeout_s=1.0, min_quorum=3)
+
+
+def test_experiment_config_validates_quorum_and_retry():
+    from conftest import make_dqn_catch_config
+    with pytest.raises(ValueError, match="barrier_timeout_s"):
+        make_dqn_catch_config(min_quorum=1)
+    with pytest.raises(ValueError, match="rpc_retry"):
+        make_dqn_catch_config(rpc_retry="fast")
+    with pytest.raises(ValueError, match="service_snapshot_period_s"):
+        make_dqn_catch_config(service_snapshot_period_s=0.0)
+
+
+# ============================================== PR 9: simulated service death
+def test_table_mark_down_blocks_data_path_not_control_path():
+    from repro.distributed import ServiceUnavailable
+
+    table = Table("t", 16, Uniform(0), MinSize(1))
+    table.insert("x")
+    table.mark_down()
+    with pytest.raises(ServiceUnavailable, match="down"):
+        table.insert("y")
+    with pytest.raises(ServiceUnavailable, match="down"):
+        table.sample(1)
+    with pytest.raises(ServiceUnavailable, match="down"):
+        table.update_priorities([0], [1.0])
+    # the watchdog, telemetry probes, and checkpointer still need these
+    assert table.size() == 1
+    state = table.state_dict()
+    table.mark_up()
+    table.insert("y")
+    assert table.size() == 2
+    restored = Table("t", 16, Uniform(0), MinSize(1))
+    restored.load_state_dict(state)
+    assert restored.size() == 1
+
+
+def test_counter_recoverable_roundtrip():
+    from repro.core.loop import Counter
+    from repro.resilience.failover import is_recoverable, service_activity
+
+    counter = Counter()
+    counter.increment(actor_steps=10, episodes=2)
+    assert is_recoverable(counter)
+    state = counter.state_dict()
+    restored = Counter()
+    restored.load_state_dict(state)
+    assert restored.get_counts() == counter.get_counts()
+    assert service_activity(counter) == 12
+
+
+def test_sharded_replay_shard_failover_matches_uninterrupted():
+    """Kill + snapshot-restore of one shard leaves the sharded service in
+    lock-step with a never-interrupted twin: same global keys, the same
+    sample stream, the same priorities (satellite d)."""
+    def build():
+        return make_replay_shards(
+            lambda: Table("s", 64, Prioritized(0.6, seed=3), MinSize(1)), 2)
+
+    live, ref = build(), build()
+    for i in range(12):
+        assert live.insert(i, priority=1.0 + i) \
+            == ref.insert(i, priority=1.0 + i)
+
+    shard = live.shards[0]
+    state = shard.state_dict()
+    shard.mark_down()
+    from repro.distributed import ServiceUnavailable
+    with pytest.raises(ServiceUnavailable):
+        shard.insert("lost")
+    shard.load_state_dict(state)
+    shard.mark_up()
+
+    # identical op streams from here on: inserts route to the same shards
+    # with the same global keys (k * num_shards + shard index) ...
+    for i in range(12, 20):
+        assert live.insert(i, priority=0.5) == ref.insert(i, priority=0.5)
+    # ... priorities update through the same routing ...
+    keys = [0, 1, 2, 3]
+    live.update_priorities(keys, [9.0, 8.0, 7.0, 6.0])
+    ref.update_priorities(keys, [9.0, 8.0, 7.0, 6.0])
+    # ... and the interleaved sample streams stay identical
+    for _ in range(15):
+        a = [(it.key, it.data, prob) for it, prob in live.sample(3)]
+        b = [(it.key, it.data, prob) for it, prob in ref.sample(3)]
+        assert a == b
+
+
+# =============================================== PR 9: telemetry hardening
+def test_metrics_pusher_survives_dead_hub_and_recovers():
+    from repro.telemetry import registry as _registry
+    from repro.telemetry.hub import MetricsHub, MetricsPusher
+
+    class _FlakyHub:
+        def __init__(self, failures):
+            self.failures = failures
+            self.hub = MetricsHub()
+
+        def push(self, node, snapshot):
+            if self.failures > 0:
+                self.failures -= 1
+                raise ConnectionError("hub is restarting")
+            return self.hub.push(node, snapshot)
+
+    _registry.configure(enabled=True, node="pusher_test")
+    flaky = _FlakyHub(failures=3)
+    pusher = MetricsPusher(flaky, "pusher_test", period_s=0.02).start()
+    try:
+        assert _wait_for(lambda: flaky.hub.num_pushes() > 0, timeout=10)
+    finally:
+        pusher.stop()
+        _registry.unconfigure()
+    # the outage was counted, never fatal, and the hub re-registered us
+    assert pusher.push_failures >= 3
+    assert "pusher_test" in flaky.hub.nodes()
+
+
+# ================================================= PR 9: service watchdog
+class _FakeLauncher:
+    """Just enough launcher surface for a ServiceWatchdog unit test."""
+
+    def __init__(self, servers):
+        self._servers = servers
+        self.errors = []
+
+    def should_stop(self):
+        return False
+
+    def _record_error(self, error):
+        self.errors.append(error)
+
+
+def test_service_watchdog_kill_restores_snapshot_at_same_address(tmp_path):
+    from repro.distributed import ServiceUnavailable, courier
+    from repro.resilience.failover import ServiceWatchdog
+
+    table = Table("t", 32, Uniform(0), MinSize(1))
+    server, handle = courier.serve(
+        table, interface=("insert", "sample", "size"), name="replay/shard_0")
+    launcher = _FakeLauncher({"replay/shard_0": server})
+    wd = ServiceWatchdog(launcher, RestartPolicy(max_restarts=2,
+                                                 backoff_base_s=0.05),
+                         snapshot_period_s=0.05,
+                         snapshot_dir=str(tmp_path))
+    wd.register("replay/shard_0", table)
+    wd.start()
+    try:
+        for i in range(5):
+            handle.insert(i)
+        wd.snapshot_now()          # deterministic cut: 5 items on disk
+        table.insert("lost")       # arrives after the snapshot -> rolled back
+        wd.kill("replay/shard_0", exit_code=42)
+        with pytest.raises(ServiceUnavailable):
+            table.insert("down")   # in-parent data path is down too
+
+        assert _wait_for(lambda: launcher._servers["replay/shard_0"]
+                         is not server, timeout=JOIN_S), \
+            f"service never respawned; errors={launcher.errors}"
+        # SAME address: the ORIGINAL pickled handle keeps working
+        assert launcher._servers["replay/shard_0"].address == server.address
+        assert handle.size() == 5     # restored to the snapshot exactly
+        handle.insert("after")        # and writable again
+        assert handle.size() == 6
+    finally:
+        wd.join(timeout=JOIN_S)
+        launcher._servers["replay/shard_0"].stop()
+    stats = wd.stats()
+    assert stats["service_restarts"] == {"replay/shard_0": 1}
+    assert stats["service_exit_kinds"]["replay/shard_0"] == [CRASH]
+    assert launcher.errors == []
+
+
+def test_service_watchdog_budget_exhaustion_records_error(tmp_path):
+    from repro.resilience.failover import ServiceWatchdog
+
+    table = Table("t", 8, Uniform(0), MinSize(1))
+    launcher = _FakeLauncher({})
+    wd = ServiceWatchdog(launcher, RestartPolicy(max_restarts=1,
+                                                 backoff_base_s=0.02),
+                         snapshot_period_s=0.05,
+                         snapshot_dir=str(tmp_path))
+    wd.register("replay", table)
+    wd.start()
+    try:
+        wd.kill("replay", exit_code=42)
+        assert _wait_for(lambda: wd.stats()["service_restarts"]
+                         .get("replay") == 1, timeout=JOIN_S)
+        assert _wait_for(lambda: "replay" not in wd._down, timeout=JOIN_S)
+        wd.kill("replay", exit_code=42)   # second death exhausts the budget
+        assert _wait_for(lambda: launcher.errors, timeout=JOIN_S)
+    finally:
+        wd.join(timeout=JOIN_S)
+    assert "not restartable" in str(launcher.errors[0])
+    assert wd.stats()["service_exit_kinds"]["replay"] == [CRASH, CRASH]
+
+
+def test_chaos_policy_service_schedules_target_services_only():
+    policy = ChaosPolicy(kill_after_steps=100, kill_jitter_steps=10,
+                        kill_targets=("replay/shard_0",), seed=7)
+    assert policy.service_schedule_for("replay/shard_1") is None
+    schedule = policy.service_schedule_for("replay/shard_0")
+    assert schedule is not None
+    assert 100 <= schedule.kill_step <= 110
+    # deterministic per-node jitter: resolving twice gives the same step
+    assert policy.service_schedule_for("replay/shard_0").kill_step \
+        == schedule.kill_step
+    assert schedule.fired == 0
+    # services that cannot mark_down are rejected as kill targets
+    from repro.resilience.failover import ServiceWatchdog
+
+    class _NoDown:
+        def state_dict(self):
+            return {}
+
+        def load_state_dict(self, state):
+            pass
+
+    wd = ServiceWatchdog(_FakeLauncher({}), RestartPolicy(), chaos=policy)
+    with pytest.raises(ValueError, match="mark_down"):
+        wd.register("replay/shard_0", _NoDown())
+
+
+@pytest.mark.slow
+def test_failover_acceptance_kill_shard_and_replica_still_learns():
+    """Acceptance (PR 9): chaos kills BOTH a replay shard and a learner
+    replica mid-training.  The watchdog restores each from its snapshot
+    and re-binds its server; no worker dies of ``ServiceUnavailable``;
+    quorum keeps averaging rounds completing; and the run still learns."""
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_distributed_experiment
+
+    config = make_dqn_catch_config(
+        seed=0, eval_episodes=20, launcher="multiprocess",
+        num_learner_replicas=2, learner_average_period=10,
+        barrier_timeout_s=2.0, min_quorum=1,
+        restart_policy=RestartPolicy(max_restarts=3),
+        chaos=ChaosPolicy(kill_after_steps=300,
+                          kill_targets=("replay/shard_0",
+                                        "learner/replica_0"),
+                          max_kills=1))
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=4000, timeout_s=300)
+    assert result.counts.get("actor_steps", 0) >= 4000
+    resilience = result.extras["resilience"]
+    assert resilience["service_restarts"].get("replay/shard_0") == 1, \
+        resilience
+    assert resilience["service_restarts"].get("learner/replica_0") == 1, \
+        resilience
+    assert CRASH in resilience["service_exit_kinds"]["replay/shard_0"]
+    assert CRASH in resilience["service_exit_kinds"]["learner/replica_0"]
+    # no WORKER died: actors absorbed the outage with skipped adds
+    assert resilience["restarts"] == {}, resilience
+    # averaging kept going through the replica outage
+    assert result.extras["learners"]["rounds"] > 0
+    assert result.final_eval_return is not None
+    assert result.final_eval_return > -0.6
