@@ -1,0 +1,168 @@
+"""Fig 20: async vs barrier learner throughput under a straggling replica.
+
+The payoff figure for ``learner_sync="async"``: two learner replicas, one
+artificially slowed (every SGD step sleeps), trained through the UNCHANGED
+``DQNBuilder`` under both synchronization modes.  With the barrier
+``ParameterServer`` the fast replica parks at every averaging rendezvous
+until the straggler catches up, so fleet throughput degrades to ~2x the
+straggler's rate.  With the push/pull ``AsyncParameterService`` the fast
+replica free-runs and the straggler only costs the blend staleness — the
+aggregate SGD rate stays near the sum of the replicas' natural rates.
+
+Method: both runs warm up until every replica has taken a few steps (the
+first step pays the jit compile, which on a 1-core CI container can skew a
+replica by seconds), then aggregate learner steps are counted over a fixed
+wall-clock window.  The honest caveat: async throughput is not async
+gradient quality — staleness costs convergence; the learning-quality
+evidence lives in ``tests/test_async_learner.py``.
+
+    python benchmarks/fig20_async_learner.py            # full measure
+    python benchmarks/fig20_async_learner.py --smoke    # CI mechanics check
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import csv_row
+from repro.agents.builders import make_distributed_agent
+from repro.agents.dqn import DQNBuilder, DQNConfig
+from repro.core import make_environment_spec
+from repro.envs import Catch
+
+AVERAGE_PERIOD = 10
+SLOW_STEP_S = 0.05          # injected per-step delay of the straggler
+WARMUP_STEPS = 2            # every replica past its jit-compiling step
+WARMUP_TIMEOUT_S = 120.0
+MEASURE_S = 20.0
+SMOKE_MEASURE_S = 6.0
+# The --smoke bar: the async fleet must beat the barrier fleet by at least
+# this factor under the injected straggler (the measured gap is ~3-5x; 1.5
+# leaves room for CI noise without letting a regression to barrier-like
+# blocking slip through).
+SMOKE_MIN_SPEEDUP = 1.5
+
+
+# Module-level factories: picklable for process-crossing backends.
+def builder_factory(spec):
+    # samples_per_insert=0 -> MinSize limiter: replicas step unthrottled,
+    # so the figure measures SGD scheduling, not the SPI schedule.
+    return DQNBuilder(spec, DQNConfig(min_replay_size=32,
+                                      samples_per_insert=0.0,
+                                      batch_size=16, n_step=1), seed=0)
+
+
+def env_factory(seed):
+    return Catch(seed=seed)
+
+
+class SlowLearner:
+    """Delegating learner whose every step sleeps first — the straggler.
+
+    time.sleep releases the GIL, so on a 1-core host the fast replica
+    keeps the interpreter while the straggler 'computes'.
+    """
+
+    def __init__(self, inner, sleep_s: float):
+        self.inner = inner
+        self.sleep_s = sleep_s
+
+    def step(self):
+        time.sleep(self.sleep_s)
+        return self.inner.step()
+
+    @property
+    def state(self):
+        return self.inner.state
+
+    @state.setter
+    def state(self, value):
+        self.inner.state = value
+
+    def get_variables(self, names=("policy",)):
+        return self.inner.get_variables(names)
+
+
+class SlowFirstReplicaBuilder:
+    """Delegating builder: the FIRST make_learner call (replica 0) gets a
+    ``SlowLearner`` wrapper; everything else passes straight through."""
+
+    def __init__(self, inner, sleep_s: float):
+        self.inner = inner
+        self.sleep_s = sleep_s
+        self.learners_made = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def make_learner(self, dataset, **kwargs):
+        learner = self.inner.make_learner(dataset, **kwargs)
+        self.learners_made += 1
+        if self.learners_made == 1:
+            return SlowLearner(learner, self.sleep_s)
+        return learner
+
+
+def run_one(sync: str, measure_s: float):
+    spec = make_environment_spec(env_factory(0))
+    builder = SlowFirstReplicaBuilder(builder_factory(spec), SLOW_STEP_S)
+    dist = make_distributed_agent(
+        builder, env_factory, num_actors=1, seed=0,
+        num_learner_replicas=2, learner_average_period=AVERAGE_PERIOD,
+        learner_sync=sync)
+    try:
+        t0 = time.time()
+        while time.time() - t0 < WARMUP_TIMEOUT_S:
+            steps = dist.learner_stats()["per_replica_steps"]
+            if all(s >= WARMUP_STEPS for s in steps):
+                break
+            time.sleep(0.1)
+        else:
+            raise RuntimeError(
+                f"{sync}: replicas never warmed up: "
+                f"{dist.learner_stats()['per_replica_steps']}")
+        start = dist.learner_stats()["per_replica_steps"]
+        t1 = time.time()
+        time.sleep(measure_s)
+        end_stats = dist.learner_stats()
+        wall = time.time() - t1
+    finally:
+        dist.stop()
+    per_replica = [e - s for s, e in zip(start,
+                                         end_stats["per_replica_steps"])]
+    total = sum(per_replica)
+    return {"sgd_per_sec": total / max(wall, 1e-9),
+            "per_replica": per_replica,
+            "rounds": end_stats["rounds"]}
+
+
+def main(smoke: bool = False):
+    measure_s = SMOKE_MEASURE_S if smoke else MEASURE_S
+    results = {}
+    for sync in ("barrier", "async"):
+        r = run_one(sync, measure_s)
+        results[sync] = r
+        csv_row(f"fig20/{sync}/sgd_steps_per_sec",
+                round(r["sgd_per_sec"], 1))
+        csv_row(f"fig20/{sync}/per_replica_steps", r["per_replica"])
+        csv_row(f"fig20/{sync}/rounds", r["rounds"])
+    speedup = (results["async"]["sgd_per_sec"]
+               / max(results["barrier"]["sgd_per_sec"], 1e-9))
+    csv_row("fig20/async_over_barrier_speedup", round(speedup, 2))
+    if smoke:
+        for sync, r in results.items():
+            assert all(s > 0 for s in r["per_replica"]), (
+                f"{sync}: a replica never stepped in the window: {r}")
+            assert r["rounds"] >= 1, (
+                f"{sync}: no parameter exchange completed: {r}")
+        assert speedup >= SMOKE_MIN_SPEEDUP, (
+            f"async fleet only {speedup:.2f}x the barrier fleet under a "
+            f"{SLOW_STEP_S * 1000:.0f}ms/step straggler (expected >= "
+            f"{SMOKE_MIN_SPEEDUP}x): {results}")
+        print(f"fig20 smoke OK: {speedup:.2f}x",
+              {s: r["per_replica"] for s, r in results.items()})
+    return results
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

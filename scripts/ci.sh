@@ -63,6 +63,10 @@ echo "[ci] smoke: exact-resume checkpoint overhead (fig19 --smoke)"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/fig19_resume_overhead.py --smoke
 
+echo "[ci] smoke: async vs barrier learner throughput (fig20 --smoke)"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/fig20_async_learner.py --smoke
+
 echo "[ci] smoke: multiprocess launcher — DQN on Catch over courier RPC"
 # a real file, not a stdin heredoc: spawn children re-import __main__
 python scripts/smoke_multiprocess.py

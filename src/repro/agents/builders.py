@@ -24,9 +24,12 @@ from repro.core.inference import policy_is_feed_forward
 from repro.distributed.launchers import JoinTimeout, get_launcher
 from repro.distributed.program import Program, Replica
 from repro.envs.vector import VectorEnv
-from repro.learners import (PARAM_SERVER_INTERFACE, LearnerReplicaWorker,
-                            MultiLearner, ParameterServer)
-from repro.replay import PrefetchingDataset, ShardedReplay, make_replay_shards
+from repro.learners import (ASYNC_PARAM_SERVICE_INTERFACE,
+                            PARAM_SERVER_INTERFACE, AsyncParameterService,
+                            LearnerReplicaWorker, MultiLearner,
+                            ParameterServer)
+from repro.replay import (PrefetchingDataset, ShardedReplay, ShardWriter,
+                          make_replay_shards)
 from repro.replay.service import REPLAY_INTERFACE
 from repro.telemetry import (HUB_INTERFACE, MetricsHub, MetricsPusher,
                              WorkerTelemetry)
@@ -91,6 +94,28 @@ def _effective_replicas(options, num_learner_replicas):
     return replicas, engaged
 
 
+def _effective_sync(options, learner_sync):
+    """Resolved learner sync mode; ``"async"`` rejects offline builders for
+    the same reason explicit replicas do (no shards, no replica streams)."""
+    sync = _resolve(learner_sync, options.learner_sync)
+    if sync not in ("barrier", "quorum", "async"):
+        raise ValueError(f"learner_sync must be 'barrier', 'quorum' or "
+                         f"'async', got {sync!r}")
+    if sync == "async" and options.offline:
+        raise ValueError(
+            "offline builders cannot run learner_sync='async': the fixed "
+            "dataset has no replay shards to give replicas affinity over")
+    return sync
+
+
+def _effective_routing(options, replay_routing):
+    routing = _resolve(replay_routing, options.replay_routing)
+    if routing not in ("round_robin", "hash", "affinity"):
+        raise ValueError(f"replay_routing must be 'round_robin', 'hash' or "
+                         f"'affinity', got {routing!r}")
+    return routing
+
+
 def _replica_sharding(options, num_replay_shards, num_replicas):
     """Shard count for a multi-learner run: replica i consumes shard i
     exclusively (shard affinity), so the counts must match — an unset/1
@@ -142,6 +167,8 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
                num_envs: Optional[int] = None,
                num_learner_replicas: Optional[int] = None,
                learner_average_period: Optional[int] = None,
+               learner_sync: Optional[str] = None,
+               replay_routing: Optional[str] = None,
                telemetry: Optional[bool] = None) -> Agent:
     """Synchronous single-process agent: actor and learner in lockstep.
 
@@ -154,26 +181,44 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
     ``num_learner_replicas`` routes learning through a ``MultiLearner``:
     one replica per replay shard, stepped sequentially round-robin by the
     agent's schedule, with parameter averaging every
-    ``learner_average_period`` per-replica steps.
+    ``learner_average_period`` per-replica steps.  ``learner_sync="async"``
+    swaps the in-line barrier merge for an ``AsyncParameterService``: each
+    replica pushes/pulls at its own period boundary (and engages the
+    multi-learner machinery even at one replica — the parity case).  A
+    sequential schedule has no stragglers, so ``"quorum"`` degenerates to
+    ``"barrier"`` here.
+
+    ``replay_routing="affinity"`` gives each env's adder a ``ShardWriter``
+    onto its assigned shard (``env e -> shard e % num_shards``) instead of
+    routing every insert through the front-end cursor.
     """
     options = builder.options
     # (Re)configure the process registry BEFORE any component construction:
     # learners/engines/tables register their metrics and probes in __init__.
     _telemetry.configure(enabled=_resolve(telemetry, options.telemetry),
                          node="local")
+    sync = _effective_sync(options, learner_sync)
+    routing = _effective_routing(options, replay_routing)
     replicas, multi = _effective_replicas(options, num_learner_replicas)
+    multi = multi or sync == "async"
     period = _resolve(learner_average_period,
                       options.learner_average_period)
     num_shards = (_replica_sharding(options, num_replay_shards, replicas)
                   if multi else _effective_shards(options, num_replay_shards))
     num_envs = _resolve(num_envs, options.num_envs_per_actor)
-    table = make_replay_shards(builder.make_replay, num_shards)
+    table = make_replay_shards(builder.make_replay, num_shards,
+                               routing=routing)
     _register_replay_probe(table)
     shard_tables = None
     if multi:
         replica_learners, _, shard_tables = _make_replica_learners(
             builder, table, replicas)
-        learner = MultiLearner(replica_learners, average_period=period)
+        if sync == "async":
+            learner = MultiLearner(
+                replica_learners, average_period=period,
+                async_service=AsyncParameterService(replicas))
+        else:
+            learner = MultiLearner(replica_learners, average_period=period)
     else:
         iterator = builder.make_dataset(table)
         learner = builder.make_learner(
@@ -181,12 +226,19 @@ def make_agent(builder: AgentBuilder, seed: int = 0,
     client = VariableClient(learner,
                             update_period=options.variable_update_period)
     policy = builder.make_policy(evaluation=False)
+    affine = routing == "affinity" and isinstance(table, ShardedReplay)
     if num_envs > 1:
-        adders = [builder.make_adder(table) for _ in range(num_envs)]
+        if affine:
+            adders = [
+                builder.make_adder(table.shard_view(e % table.num_shards))
+                for e in range(num_envs)]
+        else:
+            adders = [builder.make_adder(table) for _ in range(num_envs)]
         actor = builder.make_batched_actor(policy, client, adders, seed)
     else:
+        sink = table.shard_view(0) if affine else table
         actor = builder.make_actor(policy, client,
-                                   builder.make_adder(table), seed)
+                                   builder.make_adder(sink), seed)
     consuming = table.selector.consumes
 
     if multi and replicas > 1:
@@ -316,13 +368,21 @@ class _ActorWorker:
     run's ``ChaosPolicy``) installs a courier-layer fault injector in this
     worker's process.  Both are picklable and resolved per replica at
     assembly time — the chaos acceptance tests drive them.
+
+    ``shard_tables`` (a list of per-shard handles, one per ``replay/shard_i``
+    node) switches the worker to shard-affine routing: env ``e`` of actor
+    ``actor_index`` writes through its own ``ShardWriter`` straight to shard
+    ``(actor_index * num_envs + e) % num_shards`` — zero front-end
+    coordination, and the global keys it observes stay interchangeable with
+    the front-end's (priority updates route back by key).
     """
 
     def __init__(self, env_factory, builder, variable_source, counter,
                  table, seed: int, max_episodes: Optional[int] = None,
                  num_envs: int = 1, inference=None, telemetry=None,
                  chaos=None, rpc_chaos=None, rpc_retry=None,
-                 resilient: bool = False):
+                 resilient: bool = False, actor_index: int = 0,
+                 shard_tables=None):
         # FIRST: in a spawn child this configures the process registry, so
         # everything constructed below (actors, engines, courier clients)
         # records into it.  Under the local launcher the parent already
@@ -343,23 +403,34 @@ class _ActorWorker:
         builder = _builder_of(builder)
         options = builder.options
         num_envs = max(int(num_envs), 1)
+
+        def env_sink(e):
+            # the table each env's adder writes to: its affine shard when
+            # shard handles were wired in, the routing front-end otherwise
+            if shard_tables is not None:
+                idx = (actor_index * num_envs + e) % len(shard_tables)
+                return ShardWriter(shard_tables[idx], idx, len(shard_tables))
+            return table
+
         if inference is not None:
             if num_envs > 1:
-                adders = [builder.make_adder(table) for _ in range(num_envs)]
+                adders = [builder.make_adder(env_sink(e))
+                          for e in range(num_envs)]
                 actor = builder.make_inference_actor(inference, adders=adders)
             else:
                 actor = builder.make_inference_actor(
-                    inference, adder=builder.make_adder(table))
+                    inference, adder=builder.make_adder(env_sink(0)))
         else:
             client = VariableClient(variable_source, update_period=1)
             policy = builder.make_policy(evaluation=False)
             if num_envs > 1:
-                adders = [builder.make_adder(table) for _ in range(num_envs)]
+                adders = [builder.make_adder(env_sink(e))
+                          for e in range(num_envs)]
                 actor = builder.make_batched_actor(policy, client, adders,
                                                    seed)
             else:
                 actor = builder.make_actor(
-                    policy, client, builder.make_adder(table), seed)
+                    policy, client, builder.make_adder(env_sink(0)), seed)
         if chaos is not None:
             # no-op when the schedule has disarmed (max_kills delivered)
             actor = chaos.wrap(actor)
@@ -538,6 +609,8 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
                            rpc_retry=None,
                            barrier_timeout_s: Optional[float] = None,
                            min_quorum: Optional[int] = None,
+                           learner_sync: Optional[str] = None,
+                           replay_routing: Optional[str] = None,
                            service_snapshot_period_s: Optional[float] = None,
                            restore=None) -> DistributedAgent:
     """Replicated actors + one learner + replay (+ background evaluator),
@@ -587,6 +660,20 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     pre-launch hook called as ``restore(learner, table, counter)`` once
     every service exists but before any worker runs — exact-resume state
     is applied through it.
+
+    ``learner_sync="async"`` drops the rendezvous entirely: a
+    ``learner/param_service`` node (an ``AsyncParameterService``,
+    recoverable like every service) replaces ``learner/param_server``,
+    and each replica pushes its state / pulls the staleness-weighted
+    blend at its own cadence — no replica ever waits for a straggler.
+    Async engages the multi-learner machinery even at one replica (the
+    parity configuration) and is incompatible with the quorum knobs.
+
+    ``replay_routing="affinity"`` (with sharded replay and vectorized
+    actors) hands every env its own ``ShardWriter`` onto the
+    ``replay/shard_i`` node it is assigned to, bypassing the front-end
+    routing cursor on the insert hot path while keeping global keys —
+    and therefore priority updates and restores — interchangeable.
     """
     launcher_cls = get_launcher(launcher)
     program = Program("distributed_agent")
@@ -613,7 +700,16 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     _telemetry.configure(enabled=telemetry_on, node="services")
     metrics_hub = MetricsHub(jsonl_path=telemetry_jsonl) \
         if telemetry_on else None
+    sync = _effective_sync(options, learner_sync)
+    routing = _effective_routing(options, replay_routing)
+    if sync == "async" and (barrier_timeout_s is not None
+                            or min_quorum is not None):
+        raise ValueError(
+            "learner_sync='async' is incompatible with barrier_timeout_s/"
+            "min_quorum: async replicas never rendezvous, so there is no "
+            "round to time out")
     replicas, multi = _effective_replicas(options, num_learner_replicas)
+    multi = multi or sync == "async"
     period = _resolve(learner_average_period,
                       options.learner_average_period)
     num_shards = (_replica_sharding(options, num_replay_shards, replicas)
@@ -625,25 +721,39 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
         raise ValueError(f"inference must be 'local' or 'server', "
                          f"got {inference_mode!r}")
 
-    table = make_replay_shards(builder.make_replay, num_shards)
+    table = make_replay_shards(builder.make_replay, num_shards,
+                               routing=routing)
     _register_replay_probe(table)
     datasets: List = []
     param_server = None
+    async_service = None
     replica_workers: List[LearnerReplicaWorker] = []
     if multi:
         replica_learners, datasets, shards = _make_replica_learners(
             builder, table, replicas, prefetch=prefetch)
-        param_server = ParameterServer(replicas, period,
-                                       barrier_timeout_s=barrier_timeout_s,
-                                       min_quorum=min_quorum)
-        replica_workers = [
-            LearnerReplicaWorker(replica_learner, param_server, i, period,
-                                 max_steps=max_learner_steps,
-                                 dataset=datasets[i], shard=shards[i])
-            for i, replica_learner in enumerate(replica_learners)]
-        learner = MultiLearner(replica_learners, average_period=period,
-                               param_server=param_server,
-                               workers=replica_workers)
+        if sync == "async":
+            async_service = AsyncParameterService(replicas)
+            replica_workers = [
+                LearnerReplicaWorker(replica_learner, async_service, i,
+                                     period, max_steps=max_learner_steps,
+                                     dataset=datasets[i], shard=shards[i],
+                                     sync_mode="async")
+                for i, replica_learner in enumerate(replica_learners)]
+            learner = MultiLearner(replica_learners, average_period=period,
+                                   async_service=async_service,
+                                   workers=replica_workers)
+        else:
+            param_server = ParameterServer(
+                replicas, period, barrier_timeout_s=barrier_timeout_s,
+                min_quorum=min_quorum)
+            replica_workers = [
+                LearnerReplicaWorker(replica_learner, param_server, i,
+                                     period, max_steps=max_learner_steps,
+                                     dataset=datasets[i], shard=shards[i])
+                for i, replica_learner in enumerate(replica_learners)]
+            learner = MultiLearner(replica_learners, average_period=period,
+                                   param_server=param_server,
+                                   workers=replica_workers)
         worker = None
     else:
         iterator = builder.make_dataset(table)
@@ -727,18 +837,27 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
     # replay placement: one service node per shard (independently
     # addressable — what a multi-host launcher would schedule onto separate
     # replay servers), plus the routing front-end the adders talk to.
+    shard_handles = None
     if isinstance(table, ShardedReplay):
-        for i, shard in enumerate(table.shards):
+        shard_handles = [
             program.add_node(f"replay/shard_{i}", lambda s=shard: s,
                              role="service", interface=REPLAY_INTERFACE)
+            for i, shard in enumerate(table.shards)]
     replay_handle = program.add_node("replay", lambda: table, role="service",
                                      interface=REPLAY_INTERFACE)
     if multi:
         # replica i has shard affinity with replay/shard_i; the param
-        # server is the averaging rendezvous; the "learner" endpoint stays
-        # the one variable source actors and evaluators already use.
-        program.add_node("learner/param_server", lambda: param_server,
-                         role="service", interface=PARAM_SERVER_INTERFACE)
+        # server (or push/pull service) is the exchange point; the
+        # "learner" endpoint stays the one variable source actors and
+        # evaluators already use.
+        if async_service is not None:
+            program.add_node("learner/param_service",
+                             lambda: async_service, role="service",
+                             interface=ASYNC_PARAM_SERVICE_INTERFACE)
+        else:
+            program.add_node("learner/param_server", lambda: param_server,
+                             role="service",
+                             interface=PARAM_SERVER_INTERFACE)
         for i, replica_worker in enumerate(replica_workers):
             program.add_node(f"learner/replica_{i}",
                              lambda w=replica_worker: w, role="service",
@@ -769,6 +888,8 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
         # courier edges that out-of-process placement creates.
         actor_chaos = Replica(lambda i: chaos.schedule_for(f"actor/{i}"))
         actor_rpc_chaos = chaos
+    actor_shard_tables = (shard_handles if routing == "affinity"
+                          and shard_handles is not None else None)
     program.add_node(
         "actor", _ActorWorker, env_factory, actor_builder, learner_handle,
         counter_handle, replay_handle,
@@ -778,7 +899,9 @@ def make_distributed_agent(builder: AgentBuilder, env_factory,
         telemetry=actor_telemetry,
         chaos=actor_chaos, rpc_chaos=actor_rpc_chaos,
         rpc_retry=rpc_retry,
-        resilient=restart_policy is not None)
+        resilient=restart_policy is not None,
+        actor_index=Replica(lambda i: i),
+        shard_tables=actor_shard_tables)
     eval_log_handle = None
     if with_evaluator:
         eval_log_handle = program.add_node(

@@ -63,6 +63,17 @@ class BuilderOptions:
     learner_average_period: per-replica SGD steps between parameter-
         averaging rounds (params, target params, optimizer state, and step
         counters are all element-wise averaged).
+    learner_sync: how replicas exchange parameters — ``"barrier"`` (strict
+        all-or-nothing rendezvous), ``"quorum"`` (barrier with a timeout:
+        needs ``barrier_timeout_s`` at the experiment layer), or
+        ``"async"`` (push/pull ``AsyncParameterService``: each replica
+        pushes at its own cadence and pulls the latest staleness-weighted
+        blend, never waiting for peers).  ``"async"`` engages the
+        multi-learner machinery even at one replica (the parity case).
+    replay_routing: how inserts are routed across replay shards —
+        ``"round_robin"`` (default), ``"hash"``, or ``"affinity"``
+        (vectorized actors write each env's stream straight to its
+        assigned shard through per-env ``ShardWriter``s).
     telemetry: enable ``repro.telemetry`` for this agent's runs — every
         process records RPC latencies, queue waits, block times etc. into
         its ``MetricRegistry`` and pushes snapshots to a run-wide
@@ -82,6 +93,8 @@ class BuilderOptions:
     inference: str = "local"
     num_learner_replicas: int = 1
     learner_average_period: int = 50
+    learner_sync: str = "barrier"
+    replay_routing: str = "round_robin"
     telemetry: bool = False
     telemetry_push_period_s: float = 0.5
 
@@ -122,6 +135,14 @@ class BuilderOptions:
             raise ValueError(
                 f"learner_average_period must be >= 1, got "
                 f"{self.learner_average_period}")
+        if self.learner_sync not in ("barrier", "quorum", "async"):
+            raise ValueError(
+                f"learner_sync must be 'barrier', 'quorum' or 'async', got "
+                f"{self.learner_sync!r}")
+        if self.replay_routing not in ("round_robin", "hash", "affinity"):
+            raise ValueError(
+                f"replay_routing must be 'round_robin', 'hash' or "
+                f"'affinity', got {self.replay_routing!r}")
         if self.telemetry_push_period_s <= 0:
             raise ValueError(
                 f"telemetry_push_period_s must be > 0, got "

@@ -179,6 +179,22 @@ class VectorizedEnvironmentLoop:
         self._ep_start = [time.monotonic()] * vector_env.num_envs
         self._ticks = 0
 
+    # -- exact resume (repro.resilience) -------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Carried loop state: the tick counter (weight-sync cadence) and
+        the per-env in-flight episode accumulators.  The batched timestep
+        itself is NOT captured — the envs restore through ``VectorEnv.
+        get_state``/``set_state`` and the next ``run()`` call re-derives
+        the observation from them."""
+        return {"ticks": self._ticks,
+                "ep_return": list(self._ep_return),
+                "ep_steps": list(self._ep_steps)}
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        self._ticks = int(state["ticks"])
+        self._ep_return = [float(r) for r in state["ep_return"]]
+        self._ep_steps = [int(s) for s in state["ep_steps"]]
+
     def run(self, num_episodes: Optional[int] = None,
             num_steps: Optional[int] = None,
             should_stop: Optional[Callable[[], bool]] = None) -> List[Dict]:

@@ -97,6 +97,22 @@ class VectorEnv(types.Environment):
             steps.append(ts)
         return stack_timesteps(steps)
 
+    # -- exact resume (repro.resilience) -------------------------------
+    def get_state(self):
+        """Member env states (None for envs without ``get_state``) + the
+        auto-reset mask — what a run-wide checkpoint captures so a resumed
+        vectorized loop continues mid-flight episodes instead of resetting
+        every slot."""
+        return {"envs": [getattr(env, "get_state", lambda: None)()
+                         for env in self._envs],
+                "needs_reset": self._needs_reset.copy()}
+
+    def set_state(self, state):
+        for env, env_state in zip(self._envs, state["envs"]):
+            if env_state is not None and hasattr(env, "set_state"):
+                env.set_state(env_state)
+        self._needs_reset[:] = np.asarray(state["needs_reset"], bool)
+
     def observation_spec(self):
         return self._envs[0].observation_spec()
 

@@ -111,6 +111,20 @@ class ExperimentConfig:
     min_quorum: minimum replica contributions for a timed-out round to
         merge (None with ``barrier_timeout_s`` set = 1).  Requires
         ``barrier_timeout_s``.
+    learner_sync: how learner replicas exchange parameters (None = defer
+        to the builder's options, whose default is ``"barrier"``) —
+        ``"barrier"`` (strict all-or-nothing rendezvous), ``"quorum"``
+        (barrier + ``barrier_timeout_s``/``min_quorum``), or ``"async"``
+        (push/pull ``AsyncParameterService``: replicas push at their own
+        cadence and pull the latest staleness-weighted blend, never
+        waiting for peers).  ``"async"`` engages the multi-learner
+        machinery even at one replica — the 1-replica parity case — and
+        is incompatible with the quorum knobs.
+    replay_routing: insert routing across replay shards (None = defer to
+        the builder's options) — ``"round_robin"``, ``"hash"``, or
+        ``"affinity"`` (vectorized actors write each env's stream
+        straight to its assigned shard through per-env ``ShardWriter``s;
+        priority updates route back by key).
     service_snapshot_period_s: cadence at which the service watchdog
         snapshots recoverable services for failover (None = 0.5s).  Only
         meaningful with ``restart_policy`` under the multiprocess
@@ -145,6 +159,8 @@ class ExperimentConfig:
     rpc_retry: Optional[Any] = None
     barrier_timeout_s: Optional[float] = None
     min_quorum: Optional[int] = None
+    learner_sync: Optional[str] = None
+    replay_routing: Optional[str] = None
     service_snapshot_period_s: Optional[float] = None
 
     def __post_init__(self):
@@ -220,6 +236,30 @@ class ExperimentConfig:
             if self.min_quorum < 1:
                 raise ValueError(f"min_quorum must be >= 1, "
                                  f"got {self.min_quorum}")
+        if self.learner_sync is not None:
+            if self.learner_sync not in ("barrier", "quorum", "async"):
+                raise ValueError(
+                    f"learner_sync must be 'barrier', 'quorum' or 'async', "
+                    f"got {self.learner_sync!r}")
+            if self.learner_sync == "quorum" \
+                    and self.barrier_timeout_s is None:
+                raise ValueError(
+                    "learner_sync='quorum' requires barrier_timeout_s "
+                    "(the timeout is what lets a round close below full "
+                    "strength)")
+            if self.learner_sync == "async" and (
+                    self.barrier_timeout_s is not None
+                    or self.min_quorum is not None):
+                raise ValueError(
+                    "learner_sync='async' is incompatible with "
+                    "barrier_timeout_s/min_quorum: async replicas never "
+                    "rendezvous, so there is no round to time out")
+        if self.replay_routing is not None \
+                and self.replay_routing not in ("round_robin", "hash",
+                                                "affinity"):
+            raise ValueError(
+                f"replay_routing must be 'round_robin', 'hash' or "
+                f"'affinity', got {self.replay_routing!r}")
         if self.service_snapshot_period_s is not None \
                 and self.service_snapshot_period_s <= 0:
             raise ValueError(f"service_snapshot_period_s must be > 0, "

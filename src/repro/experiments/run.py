@@ -79,6 +79,8 @@ def run_experiment(config: ExperimentConfig,
                        num_envs=num_envs,
                        num_learner_replicas=config.num_learner_replicas,
                        learner_average_period=config.learner_average_period,
+                       learner_sync=config.learner_sync,
+                       replay_routing=config.replay_routing,
                        telemetry=config.telemetry)
     # Single-process telemetry: no pusher thread needed — the whole run
     # lives in this process, so one final push at the end captures it all.
@@ -282,6 +284,8 @@ def run_distributed_experiment(config: ExperimentConfig, num_actors: int,
                                   rpc_retry=config.rpc_retry,
                                   barrier_timeout_s=config.barrier_timeout_s,
                                   min_quorum=config.min_quorum,
+                                  learner_sync=config.learner_sync,
+                                  replay_routing=config.replay_routing,
                                   service_snapshot_period_s=(
                                       config.service_snapshot_period_s),
                                   restore=restore)

@@ -3,6 +3,7 @@ from repro.replay.dataset import (ReplaySample, SampleInfo, as_iterator,  # noqa
 from repro.replay.prefetch import PrefetchingDataset  # noqa: F401
 from repro.replay.rate_limiter import MinSize, RateLimiter, RateLimiterTimeout, SampleToInsertRatio  # noqa: F401
 from repro.replay.selectors import Fifo, Lifo, Prioritized, Uniform  # noqa: F401
-from repro.replay.service import (REPLAY_INTERFACE, AggregateRateLimiter,  # noqa: F401
-                                  ShardedReplay, make_replay_shards)
+from repro.replay.service import (REPLAY_INTERFACE, ROUTING_MODES,  # noqa: F401
+                                  AggregateRateLimiter, ShardedReplay,
+                                  ShardWriter, make_replay_shards)
 from repro.replay.table import Table  # noqa: F401

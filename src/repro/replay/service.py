@@ -11,9 +11,15 @@ registered builder works unchanged.
 
 Design:
 
-- **Insert routing** — round-robin (default) or a multiplicative hash of the
-  insert ticket; both keep shards balanced so per-shard ``min_size_to_sample``
-  thresholds are reached together.
+- **Insert routing** — round-robin (default), a multiplicative hash of the
+  insert ticket, or *affinity*: writers hold a ``ShardWriter`` view of one
+  shard and insert shard-directly, bypassing the front-end's routing cursor
+  entirely (the PR 4 follow-on — per-env adder streams land on assigned
+  shards, so the actor→replay→learner pipeline is shard-parallel end to end
+  with no cross-shard coordination).  All modes keep shards balanced so
+  per-shard ``min_size_to_sample`` thresholds are reached together; under
+  affinity the balance comes from the env→shard assignment being a
+  round-robin of the fleet's global env ids.
 - **Shard-id-encoded keys** — the global key of an item stored in shard ``i``
   with local key ``k`` is ``k * num_shards + i``; ``update_priorities`` can
   therefore route each key back to its owning shard without any lookup table.
@@ -42,6 +48,80 @@ REPLAY_INTERFACE = ("insert", "sample", "update_priorities", "size", "stats")
 
 # Knuth's multiplicative hash constant: decorrelates consecutive tickets.
 _HASH_MULT = 2654435761
+
+# Insert-routing modes ShardedReplay accepts.  "affinity" means writers
+# route themselves through ShardWriter views; the front-end falls back to
+# round-robin for any insert that still reaches it directly.
+ROUTING_MODES = ("round_robin", "hash", "affinity")
+
+
+class ShardWriter:
+    """Client-side single-shard view with global-key encoding.
+
+    Wraps one shard (an in-memory ``Table`` or a courier handle to a
+    ``replay/shard_i`` node — the call syntax is identical) and speaks the
+    insert/priority surface adders and learners use, translating between
+    the shard's LOCAL keys and the sharded service's GLOBAL keys
+    (``global = local * num_shards + shard_idx``).  This is what gives
+    per-env adders shard affinity: each env's adder writes straight to its
+    assigned shard with zero front-end coordination, while the keys it
+    observes stay interchangeable with the front-end's — priority updates
+    route back to the owning shard through the same encoding.
+
+    Picklable whenever the wrapped shard reference is (courier handles
+    degrade to ``RemoteHandle`` stubs), so vectorized actor workers carry
+    their writers across process boundaries.
+    """
+
+    def __init__(self, shard, shard_idx: int, num_shards: int):
+        if not 0 <= shard_idx < num_shards:
+            raise ValueError(
+                f"shard_idx must be in [0, {num_shards}), got {shard_idx}")
+        self.shard = shard
+        self.shard_idx = shard_idx
+        self.num_shards = num_shards
+        self._m_inserts = None
+
+    def insert(self, data, priority: float = 1.0,
+               timeout: Optional[float] = None) -> int:
+        local_key = self.shard.insert(data, priority, timeout=timeout)
+        from repro.telemetry import registry as _telemetry
+        if self._m_inserts is None and _telemetry.enabled():
+            self._m_inserts = _telemetry.counter(
+                f"replay/routing/shard_{self.shard_idx}/inserts")
+        if self._m_inserts:
+            self._m_inserts.inc()
+        return local_key * self.num_shards + self.shard_idx
+
+    def update_priorities(self, keys: Sequence[int],
+                          priorities: Sequence[float]):
+        """Global-key priority updates for items owned by THIS shard (keys
+        owned by other shards are a routing bug, not a silent drop)."""
+        locals_, ps = [], []
+        for key, priority in zip(keys, priorities):
+            local, idx = divmod(int(key), self.num_shards)
+            if idx != self.shard_idx:
+                raise ValueError(
+                    f"key {key} belongs to shard {idx}, not this writer's "
+                    f"shard {self.shard_idx}")
+            locals_.append(local)
+            ps.append(priority)
+        if locals_:
+            self.shard.update_priorities(locals_, ps)
+
+    def size(self) -> int:
+        return self.shard.size()
+
+    def __getstate__(self):
+        # the lazy metric is process-local (re-created where we land)
+        return {"shard": self.shard, "shard_idx": self.shard_idx,
+                "num_shards": self.num_shards}
+
+    def __setstate__(self, state):
+        self.shard = state["shard"]
+        self.shard_idx = state["shard_idx"]
+        self.num_shards = state["num_shards"]
+        self._m_inserts = None
 
 
 class _Ticket:
@@ -123,8 +203,9 @@ class ShardedReplay:
                  routing: str = "round_robin"):
         if not shards:
             raise ValueError("ShardedReplay needs at least one shard")
-        if routing not in ("round_robin", "hash"):
-            raise ValueError(f"unknown routing {routing!r}")
+        if routing not in ROUTING_MODES:
+            raise ValueError(f"unknown routing {routing!r} "
+                             f"(expected one of {ROUTING_MODES})")
         self.name = name
         self.shards: List[Table] = list(shards)
         self.num_shards = len(self.shards)
@@ -154,6 +235,9 @@ class ShardedReplay:
 
     # ------------------------------------------------------------ routing
     def _route(self) -> int:
+        # "affinity" inserts normally arrive shard-directly via ShardWriter
+        # views; anything still reaching the front-end (e.g. a restore
+        # replaying transitions) falls back to the round-robin cursor.
         ticket = self._insert_ticket.next()
         if self.routing == "hash":
             return ((ticket * _HASH_MULT) >> 7) % self.num_shards
@@ -164,6 +248,13 @@ class ShardedReplay:
 
     def _global_key(self, local_key: int, shard_idx: int) -> int:
         return local_key * self.num_shards + shard_idx
+
+    def shard_view(self, shard_idx: int) -> ShardWriter:
+        """A ``ShardWriter`` over shard ``shard_idx``: shard-direct inserts
+        that return GLOBAL keys (the in-memory counterpart of wiring a
+        writer to a ``replay/shard_i`` courier handle)."""
+        return ShardWriter(self.shards[shard_idx], shard_idx,
+                           self.num_shards)
 
     # ------------------------------------------------------------ table api
     @property

@@ -59,10 +59,15 @@ def service_activity(instance: Any) -> int:
 
     Services have no ``observe()`` to wrap (clients reach replay shards
     through direct in-memory refs, so a proxy would be bypassed), so kill
-    schedules trigger on the service's own progress: replay tables count
-    rate-limiter inserts + samples, learner replicas count steps taken,
-    counters count their totals.
+    schedules trigger on the service's own progress: services exposing an
+    ``activity()`` counter (the async parameter service counts pushes +
+    pulls) report it directly, replay tables count rate-limiter inserts +
+    samples, learner replicas count steps taken, counters count their
+    totals.
     """
+    activity = getattr(instance, "activity", None)
+    if callable(activity):
+        return int(activity())
     limiter = getattr(instance, "rate_limiter", None)
     if limiter is not None:
         return int(limiter.inserts + limiter.samples)

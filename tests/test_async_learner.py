@@ -1,0 +1,616 @@
+"""Fully asynchronous learner training: the async-vs-sync parity net.
+
+The credibility net for ``learner_sync="async"`` and shard-affine routing:
+
+- ``weighted_average_states`` against hand-computed pytree expectations
+  (float weighting, integer-counter exactness, single-state identity);
+- ``AsyncParameterService`` merge math per mode (mean / ema /
+  step_weighted), the single-contribution verbatim guarantee, staleness
+  bounds, lazy blend recomputation, stop/mark_down/state_dict semantics;
+- 1-replica async vs the plain learner — allclose (in fact equal) params
+  from the same seed on identical batches, both at the learner level and
+  through ``run_experiment`` (the heart of the parity net: async training
+  with one replica IS the plain learner, bit for bit);
+- shard-affine adder routing: ``ShardWriter`` global-key encoding with
+  exact key accounting, priority updates routing back to the owning shard,
+  routed-vs-round-robin sampling agreement, and one ``ExperimentConfig``
+  driving affinity + async end to end with routing/staleness telemetry;
+- program-graph placement: ``learner/param_service`` replaces
+  ``learner/param_server``, replica workers run in push/pull mode;
+- 2-replica async DQN-on-Catch learns (mean eval return clears the
+  random-policy floor) under both launchers — the acceptance criterion,
+  driven through the UNCHANGED ``DQNBuilder``.
+
+Factories come from ``conftest`` so the multiprocess backend can pickle
+them into spawn children.
+"""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import make_dqn_catch_config
+from repro.core import make_environment_spec
+from repro.envs import Catch
+from repro.learners import (ASYNC_PARAM_SERVICE_INTERFACE,
+                            AsyncParameterService, MultiLearner,
+                            ParameterServer, weighted_average_states)
+from repro.replay import ShardedReplay, ShardWriter, make_replay_shards
+from repro.replay.dataset import ReplaySample, SampleInfo
+
+CATCH_FLOOR = -0.6   # random policy mean return on Catch is ~-1..-0.6
+
+
+# ----------------------------------------------------------------- helpers
+def _catch_spec():
+    return make_environment_spec(Catch(seed=0))
+
+
+def _dqn_builder(seed=0, **overrides):
+    from repro.agents.dqn import DQNBuilder, DQNConfig
+    kwargs = dict(min_replay_size=8, samples_per_insert=0.0, batch_size=8,
+                  n_step=1, prioritized=False)
+    kwargs.update(overrides)
+    return DQNBuilder(_catch_spec(), DQNConfig(**kwargs), seed=seed)
+
+
+def _synthetic_batches(num_batches, batch_size=8, seed=0):
+    """Deterministic DQN-shaped ReplaySample batches (Catch observations)."""
+    from repro.core.types import Transition
+    rng = np.random.RandomState(seed)
+    batches = []
+    for b in range(num_batches):
+        obs = rng.rand(batch_size, 10, 5).astype(np.float32)
+        next_obs = rng.rand(batch_size, 10, 5).astype(np.float32)
+        data = Transition(
+            observation=obs,
+            action=rng.randint(0, 3, size=batch_size).astype(np.int32),
+            reward=rng.randn(batch_size).astype(np.float32),
+            discount=np.ones(batch_size, np.float32),
+            next_observation=next_obs)
+        info = SampleInfo(np.arange(batch_size, dtype=np.int64),
+                          np.full(batch_size, 1.0 / 64))
+        batches.append(ReplaySample(info, data))
+    return batches
+
+
+def _tree_allclose(a, b, **kw):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def _w(value):
+    """The one-leaf pytree the service-math tests blend."""
+    return {"w": jnp.asarray(value, jnp.float32)}
+
+
+class _StubLearner:
+    """Deterministic 'learner': step() adds 1.0 to its single param."""
+
+    def __init__(self, w):
+        self.state = _w(w)
+
+    def step(self):
+        self.state = {"w": self.state["w"] + 1.0}
+        return {}
+
+
+def _make_uniform_table():
+    from repro.replay import MinSize, Table, Uniform
+    return Table("t", 64, Uniform(0), MinSize(1))
+
+
+class _DummyShard:
+    """Picklable minimal shard: monotonically numbered local keys."""
+
+    def __init__(self):
+        self.count = 0
+
+    def insert(self, data, priority=1.0, timeout=None):
+        key = self.count
+        self.count += 1
+        return key
+
+
+# -------------------------------------------- weighted averaging math unit
+def test_weighted_average_states_matches_hand_computed_mean():
+    """Float leaves take the normalized weighted mean; dtypes survive."""
+    s1 = {"params": {"w": jnp.array([1.0, 3.0]), "b": jnp.array(2.0)}}
+    s2 = {"params": {"w": jnp.array([3.0, 5.0]), "b": jnp.array(6.0)}}
+    merged = weighted_average_states([s1, s2], [1.0, 3.0])
+    # weights normalize to 0.25/0.75
+    np.testing.assert_allclose(merged["params"]["w"], [2.5, 4.5], rtol=1e-6)
+    np.testing.assert_allclose(merged["params"]["b"], 5.0, rtol=1e-6)
+    assert merged["params"]["w"].dtype == jnp.float32
+
+
+def test_weighted_average_states_single_state_is_identity():
+    """One state: the exact pytree comes back regardless of its weight —
+    what makes a 1-replica async blend bit-equivalent to the plain
+    learner."""
+    state = {"w": jnp.array([1.0, 2.0]), "steps": jnp.array(7, jnp.int32)}
+    assert weighted_average_states([state], [0.125]) is state
+
+
+def test_weighted_average_states_integer_agreement_exact():
+    """Agreeing integer counters merge exactly at any magnitude (no float
+    round-trip), whatever the weights."""
+    big = 2 ** 24 + 1
+    s1 = {"steps": jnp.array(big, jnp.int32)}
+    s2 = {"steps": jnp.array(big, jnp.int32)}
+    merged = weighted_average_states([s1, s2], [1.0, 7.0])
+    assert int(merged["steps"]) == big
+    assert merged["steps"].dtype == jnp.int32
+
+
+def test_weighted_average_states_integer_disagreement_floor_mean():
+    """Disagreeing counters take the weighted floor mean in float64:
+    steps 10 and 20 under weights 1:3 -> 0.25*10 + 0.75*20 = 17.5 -> 17."""
+    s1 = {"steps": jnp.array(10, jnp.int32)}
+    s2 = {"steps": jnp.array(20, jnp.int32)}
+    merged = weighted_average_states([s1, s2], [1.0, 3.0])
+    assert int(merged["steps"]) == 17
+    assert merged["steps"].dtype == jnp.int32
+
+
+def test_weighted_average_states_rejects_bad_args():
+    state = _w(1.0)
+    with pytest.raises(ValueError):
+        weighted_average_states([], [])
+    with pytest.raises(ValueError):
+        weighted_average_states([state, state], [1.0])
+    with pytest.raises(ValueError):
+        weighted_average_states([state, state], [1.0, -0.5])
+    with pytest.raises(ValueError):
+        weighted_average_states([state, state], [0.0, 0.0])
+
+
+# --------------------------------------------------- async service: merges
+def test_async_service_single_contribution_is_verbatim():
+    """One contributor: pull() returns the pushed pytree object itself —
+    no averaging round-trip (the 1-replica parity guarantee)."""
+    service = AsyncParameterService(num_replicas=2, merge="ema")
+    assert service.pull() is None       # nothing pushed yet
+    state = _w(2.0)
+    service.push(0, state, step=5)
+    assert service.pull() is state
+
+
+def test_async_service_mean_merge_hand_computed():
+    service = AsyncParameterService(2, merge="mean")
+    service.push(0, _w(2.0), step=10)
+    service.push(1, _w(6.0), step=8)
+    np.testing.assert_allclose(service.pull()["w"], 4.0, rtol=1e-6)
+
+
+def test_async_service_ema_merge_weights_by_staleness():
+    """ema weight = alpha**age, age = max_step - step: steps 10 and 8 at
+    alpha 0.5 weight 1 : 0.25 -> (1*2 + 0.25*6) / 1.25 = 2.8."""
+    service = AsyncParameterService(2, merge="ema", ema_alpha=0.5)
+    service.push(0, _w(2.0), step=10)
+    service.push(1, _w(6.0), step=8)
+    np.testing.assert_allclose(service.pull()["w"], 2.8, rtol=1e-6)
+
+
+def test_async_service_step_weighted_merge():
+    """step_weighted weight = 1 + step: steps 1 and 3 weight 2 : 4 ->
+    (2*2 + 4*6) / 6 = 28/6."""
+    service = AsyncParameterService(2, merge="step_weighted")
+    service.push(0, _w(2.0), step=1)
+    service.push(1, _w(6.0), step=3)
+    np.testing.assert_allclose(service.pull()["w"], 28.0 / 6.0, rtol=1e-6)
+
+
+def test_async_service_blend_is_lazy():
+    """The blend recomputes only when a push changed something: repeated
+    pulls share one merge; the next push dirties it again."""
+    service = AsyncParameterService(2, merge="mean")
+    service.push(0, _w(2.0), step=1)
+    service.push(1, _w(4.0), step=1)
+    service.pull()
+    service.pull()
+    assert service.rounds == 1
+    service.push(0, _w(6.0), step=2)
+    np.testing.assert_allclose(service.pull()["w"], 5.0, rtol=1e-6)
+    assert service.rounds == 2
+
+
+def test_async_service_staleness_bound_drops_old_contributions():
+    """Contributions older than the bound leave the blend (and are
+    counted); a fresh re-push re-enters."""
+    service = AsyncParameterService(2, merge="mean", staleness_bound=2)
+    service.push(0, _w(1.0), step=0)
+    fresh = _w(5.0)
+    service.push(1, fresh, step=10)
+    # replica 0's state is 10 steps stale > bound 2: the blend is the
+    # fresh contribution verbatim (single survivor)
+    assert service.pull() is fresh
+    stats = service.stats()
+    assert stats["staleness_bound"] == 2
+    assert stats["dropped_stale"] == 1
+    assert stats["contributors"] == 2   # still tracked, just not blended
+    # a fresh push from replica 0 rejoins the blend
+    service.push(0, _w(3.0), step=9)
+    np.testing.assert_allclose(service.pull()["w"], 4.0, rtol=1e-6)
+
+
+def test_async_service_invalidate_drops_contribution():
+    service = AsyncParameterService(2, merge="mean")
+    service.push(0, _w(2.0), step=1)
+    survivor = _w(8.0)
+    service.push(1, survivor, step=1)
+    service.invalidate(0)
+    assert service.pull() is survivor
+    assert service.stats()["contributors"] == 1
+
+
+# ----------------------------------------------- async service: lifecycle
+def test_async_service_stats_and_activity():
+    service = AsyncParameterService(3, merge="ema")
+    service.push(0, _w(1.0), step=4)
+    service.push(1, _w(2.0), step=6)
+    service.pull()
+    assert service.stats() == {"num_replicas": 3, "merge": "ema",
+                               "pushes": 2, "pulls": 1, "merges": 1,
+                               "contributors": 2, "max_step": 6}
+    assert service.activity() == 3      # pushes + pulls
+
+
+def test_async_service_stop_quiesces_push_and_pull():
+    service = AsyncParameterService(1)
+    service.push(0, _w(1.0), step=1)
+    service.stop()
+    assert service.stopped
+    assert service.pull() is None       # a stopping fleet adopts nothing
+    service.push(0, _w(9.0), step=2)    # no-op, not an error
+    assert service.stats()["pushes"] == 1
+
+
+def test_async_service_mark_down_raises_service_unavailable():
+    """Simulated death: the data path raises ServiceUnavailable (a
+    ConnectionError, so replica workers degrade through their existing
+    handler) while metadata stays readable for the watchdog."""
+    from repro.distributed.courier import ServiceUnavailable
+
+    assert issubclass(ServiceUnavailable, ConnectionError)
+    service = AsyncParameterService(2)
+    service.push(0, _w(1.0), step=1)
+    service.mark_down()
+    with pytest.raises(ServiceUnavailable):
+        service.push(1, _w(2.0), step=1)
+    with pytest.raises(ServiceUnavailable):
+        service.pull()
+    assert service.stats()["pushes"] == 1      # metadata path stays up
+    assert "contrib" in service.state_dict()
+    service.mark_up()
+    assert service.pull() is not None
+
+
+def test_async_service_state_dict_roundtrip():
+    """A restored service blends exactly what the snapshot held."""
+    service = AsyncParameterService(2, merge="mean")
+    service.push(0, _w(2.0), step=3)
+    service.push(1, _w(6.0), step=5)
+    before = service.pull()
+    fresh = AsyncParameterService(2, merge="mean")
+    fresh.load_state_dict(service.state_dict())
+    _tree_allclose(fresh.pull(), before)
+    assert fresh.stats()["max_step"] == 5
+    assert fresh.stats()["pushes"] == 2
+
+
+def test_async_service_rejects_bad_args():
+    with pytest.raises(ValueError):
+        AsyncParameterService(num_replicas=0)
+    with pytest.raises(ValueError):
+        AsyncParameterService(2, merge="median")
+    with pytest.raises(ValueError):
+        AsyncParameterService(2, ema_alpha=0.0)
+    with pytest.raises(ValueError):
+        AsyncParameterService(2, ema_alpha=1.5)
+    with pytest.raises(ValueError):
+        AsyncParameterService(2, staleness_bound=0)
+    service = AsyncParameterService(2)
+    with pytest.raises(ValueError):
+        service.push(2, _w(1.0), step=1)
+    with pytest.raises(ValueError):
+        service.push(0, _w(1.0), step=-1)
+
+
+# ------------------------------------------------------------- parity net
+def test_one_replica_async_multi_learner_matches_plain_learner():
+    """The heart of the async parity net: on IDENTICAL sampled batches
+    from the same seed, a 1-replica async MultiLearner and the plain
+    learner produce allclose (equal) params — every pull returns the
+    replica's own state verbatim, so adopting the blend is a no-op."""
+    batches = _synthetic_batches(12)
+    plain = _dqn_builder(seed=3).make_learner(iter(list(batches)))
+    multi = MultiLearner(
+        [_dqn_builder(seed=3).make_learner(iter(list(batches)))],
+        average_period=4, async_service=AsyncParameterService(1))
+    for _ in range(12):
+        plain.step()
+        multi.step()
+    _tree_allclose(multi.state.params, plain.state.params)
+    _tree_allclose(multi.state.target_params, plain.state.target_params)
+    _tree_allclose(multi.state.opt_state, plain.state.opt_state)
+    assert int(multi.state.steps) == int(plain.state.steps) == 12
+    service = multi.async_service.stats()
+    assert service["pushes"] == service["pulls"] == 3   # 12 steps / period 4
+    assert service["contributors"] == 1
+
+
+def test_run_experiment_async_parity_with_single_learner_path():
+    """learner_sync='async' engages the multi-learner machinery even at
+    one replica and lands on exactly the same params as the default path —
+    same seed, same env stream, same sampled batches."""
+    from repro.experiments import run_experiment
+
+    base = make_dqn_catch_config(
+        seed=0, min_replay_size=16, samples_per_insert=0.0, batch_size=16,
+        prioritized=False, num_episodes=15, eval_episodes=0)
+    plain = run_experiment(base)
+    asynced = run_experiment(dataclasses.replace(
+        base, learner_sync="async", learner_average_period=7))
+    assert plain.learner_steps == asynced.learner_steps > 0
+    _tree_allclose(asynced.learner.state.params, plain.learner.state.params)
+    _tree_allclose(asynced.learner.state.opt_state,
+                   plain.learner.state.opt_state)
+    learners = asynced.extras["learners"]
+    assert learners["num_replicas"] == 1
+    assert learners["sync"] == "async"
+    assert learners["service"]["contributors"] == 1
+    assert learners["per_replica_steps"] == [asynced.learner_steps]
+    assert "learners" not in plain.extras
+
+
+def test_sequential_async_schedule_pushes_at_own_period():
+    """2 stub replicas, period 1, mean merge — fully hand-computed: each
+    replica pushes/pulls at ITS OWN boundary (no fleet-wide rendezvous),
+    a lone contributor adopts its own state verbatim, and later pulls
+    blend both contributions."""
+    multi = MultiLearner([_StubLearner(0.0), _StubLearner(10.0)],
+                         average_period=1,
+                         async_service=AsyncParameterService(2, merge="mean"))
+    multi.step()   # replica 0: w=1, push(0, 1, step=1), pull -> verbatim 1
+    np.testing.assert_allclose(multi.replicas[0].state["w"], 1.0)
+    multi.step()   # replica 1: w=11, push(1, 11, 1), pull -> mean(1,11)=6
+    np.testing.assert_allclose(multi.replicas[1].state["w"], 6.0)
+    multi.step()   # replica 0: w=2, push(0, 2, 2), pull -> mean(2,11)=6.5
+    np.testing.assert_allclose(multi.replicas[0].state["w"], 6.5)
+    stats = multi.stats()
+    assert stats["sync"] == "async"
+    assert stats["per_replica_steps"] == [2, 1]
+    assert stats["service"]["contributors"] == 2
+    assert stats["service"]["max_step"] == 2
+
+
+def test_multi_learner_rejects_both_server_and_service():
+    with pytest.raises(ValueError, match="not both"):
+        MultiLearner([_StubLearner(0.0)],
+                     param_server=ParameterServer(1, 1),
+                     async_service=AsyncParameterService(1))
+
+
+# ------------------------------------------------------ config validation
+def test_experiment_config_validates_sync_and_routing():
+    base = make_dqn_catch_config(seed=0)
+    with pytest.raises(ValueError, match="learner_sync"):
+        dataclasses.replace(base, learner_sync="eventually")
+    with pytest.raises(ValueError, match="barrier_timeout_s"):
+        dataclasses.replace(base, learner_sync="quorum")
+    with pytest.raises(ValueError, match="incompatible"):
+        dataclasses.replace(base, learner_sync="async",
+                            barrier_timeout_s=1.0)
+    with pytest.raises(ValueError, match="incompatible"):
+        dataclasses.replace(base, learner_sync="async",
+                            barrier_timeout_s=1.0, min_quorum=1)
+    with pytest.raises(ValueError, match="replay_routing"):
+        dataclasses.replace(base, replay_routing="sticky")
+
+
+def test_builder_options_validate_sync_and_routing():
+    from repro.builders.base import BuilderOptions
+
+    with pytest.raises(ValueError, match="learner_sync"):
+        BuilderOptions(learner_sync="eventually")
+    with pytest.raises(ValueError, match="replay_routing"):
+        BuilderOptions(replay_routing="sticky")
+
+
+def test_make_agent_rejects_async_for_offline_builders():
+    from repro.agents.bc import BCBuilder, BCConfig
+    from repro.agents.builders import make_agent
+    from repro.core.types import Transition
+
+    items = [Transition(np.zeros((10, 5), np.float32), np.int32(i % 3),
+                        np.float32(0.0), np.float32(1.0),
+                        np.zeros((10, 5), np.float32)) for i in range(8)]
+    builder = BCBuilder(_catch_spec(), items, BCConfig(batch_size=4), seed=0)
+    with pytest.raises(ValueError, match="offline"):
+        make_agent(builder, learner_sync="async")
+
+
+def test_make_distributed_agent_rejects_async_with_quorum_knobs():
+    from repro.agents.builders import make_distributed_agent
+    from conftest import DQNCatchBuilderFactory, catch_env_factory
+
+    builder = DQNCatchBuilderFactory()(_catch_spec())
+    with pytest.raises(ValueError, match="incompatible"):
+        make_distributed_agent(builder, catch_env_factory, num_actors=1,
+                               seed=0, num_learner_replicas=2,
+                               learner_sync="async", barrier_timeout_s=1.0)
+
+
+# --------------------------------------------------- shard-affine routing
+def test_shard_writer_global_key_encoding_exact():
+    """Writer on shard 1 of 3: insert k lands at global key k*3 + 1, and
+    priority updates for foreign shards are a loud routing bug."""
+    table = _make_uniform_table()
+    writer = ShardWriter(table, shard_idx=1, num_shards=3)
+    keys = [writer.insert(np.full(3, k, np.float32)) for k in range(5)]
+    assert keys == [1, 4, 7, 10, 13]
+    assert writer.size() == 5
+    writer.update_priorities([4, 10], [2.0, 3.0])       # owned keys: fine
+    with pytest.raises(ValueError, match="shard 0"):
+        writer.update_priorities([3], [1.0])            # 3 % 3 == shard 0
+    with pytest.raises(ValueError):
+        ShardWriter(table, shard_idx=3, num_shards=3)
+    table.stop()
+
+
+def test_shard_writer_keys_interchangeable_with_front_end():
+    """shard_view inserts produce keys the ShardedReplay front-end routes
+    back to the owning shard; only the written shard grows."""
+    sharded = ShardedReplay.from_factory(_make_uniform_table, 2,
+                                         routing="affinity")
+    writer = sharded.shard_view(0)
+    keys = [writer.insert(np.full(3, k, np.float32)) for k in range(6)]
+    assert all(sharded.shard_of(k) == 0 for k in keys)
+    assert sharded.shards[0].size() == 6
+    assert sharded.shards[1].size() == 0
+    assert sharded.size() == 6
+    # front-end priority updates reach the owning shard through the key
+    sharded.update_priorities(keys, [2.0] * len(keys))
+    # shard-direct inserts never touched the front-end routing cursor
+    assert sharded._insert_ticket.value == 0
+    sharded.stop()
+
+
+def test_routed_and_round_robin_inserts_sample_identically():
+    """The agreement test: the same item stream written shard-directly
+    (affinity) and through the front-end cursor (round_robin) produces the
+    same global keys, the same shard contents, and — with the shards'
+    deterministic selector streams — the same sampled batches."""
+    routed = ShardedReplay.from_factory(_make_uniform_table, 2,
+                                        routing="affinity")
+    plain = ShardedReplay.from_factory(_make_uniform_table, 2,
+                                       routing="round_robin")
+    writers = [routed.shard_view(i) for i in range(2)]
+    for k in range(16):
+        data = np.full(3, k, np.float32)
+        assert writers[k % 2].insert(data) == plain.insert(data)
+    for (item_r, prob_r), (item_p, prob_p) in zip(routed.sample(8),
+                                                  plain.sample(8)):
+        assert item_r.key == item_p.key
+        assert prob_r == prob_p
+        np.testing.assert_array_equal(item_r.data, item_p.data)
+    routed.stop()
+    plain.stop()
+
+
+def test_make_replay_shards_threads_routing_through():
+    sharded = make_replay_shards(_make_uniform_table, 2, routing="affinity")
+    assert isinstance(sharded, ShardedReplay)
+    assert sharded.routing == "affinity"
+    with pytest.raises(ValueError, match="routing"):
+        ShardedReplay(sharded.shards, routing="sticky")
+    sharded.stop()
+
+
+def test_shard_writer_pickles_without_local_metric():
+    writer = ShardWriter(_DummyShard(), shard_idx=1, num_shards=2)
+    writer.insert(np.zeros(3))
+    clone = pickle.loads(pickle.dumps(writer))
+    assert (clone.shard_idx, clone.num_shards) == (1, 2)
+    assert clone.insert(np.zeros(3)) == 1 * 2 + 1   # local key 1, shard 1
+
+
+def test_run_experiment_affinity_async_end_to_end_with_telemetry():
+    """One ExperimentConfig drives the whole tentpole: async learner
+    replicas + shard-affine vectorized adders, with the routing counters
+    proving every insert went shard-direct and the push/pull staleness
+    histograms populated."""
+    from repro.experiments import run_experiment
+
+    config = make_dqn_catch_config(
+        seed=0, min_replay_size=16, samples_per_insert=0.0, batch_size=16,
+        prioritized=False, num_episodes=12, eval_episodes=0,
+        num_envs_per_actor=2, num_learner_replicas=2,
+        learner_average_period=5, learner_sync="async",
+        replay_routing="affinity", telemetry=True)
+    result = run_experiment(config)
+    assert result.learner_steps > 0
+    learners = result.extras["learners"]
+    assert learners["sync"] == "async"
+    assert learners["num_replicas"] == 2
+    assert learners["rounds"] >= 1
+    assert learners["service"]["pushes"] > 0
+    merged = result.extras["telemetry"]["merged"]
+    # both shards took shard-direct writes (env e -> shard e % 2)
+    assert merged["replay/routing/shard_0/inserts"]["value"] > 0
+    assert merged["replay/routing/shard_1/inserts"]["value"] > 0
+    # the async exchange telemetry is live
+    assert merged["learner/push_staleness"]["count"] > 0
+    assert merged["learner/pull_age_steps"]["count"] > 0
+
+
+# ------------------------------------------------------ program placement
+def test_make_distributed_agent_places_async_param_service():
+    from repro.agents.builders import make_distributed_agent
+    from conftest import DQNCatchBuilderFactory, catch_env_factory
+
+    builder = DQNCatchBuilderFactory(samples_per_insert=0.0)(_catch_spec())
+    dist = make_distributed_agent(builder, catch_env_factory, num_actors=1,
+                                  seed=0, num_learner_replicas=2,
+                                  learner_average_period=10,
+                                  learner_sync="async", prefetch_size=2)
+    try:
+        names = {n.name for n in dist.program.nodes}
+        assert "learner/param_service" in names
+        assert "learner/param_server" not in names
+        node = dist.program.node("learner/param_service")
+        assert node.interface == ASYNC_PARAM_SERVICE_INTERFACE
+        assert isinstance(dist.learner, MultiLearner)
+        service = dist.program.resolve("learner/param_service")
+        assert dist.learner.async_service is service
+        # replica workers run push/pull against the shared service
+        for i in range(2):
+            worker = dist.program.resolve(f"learner/replica_{i}")
+            assert worker.sync_mode == "async"
+            assert worker.param_server is service
+    finally:
+        dist.stop()
+    assert all(d.closed for d in dist.datasets)
+
+
+# --------------------------------------------------- learning acceptance
+@pytest.mark.parametrize("launcher", [
+    "local",
+    pytest.param("multiprocess", marks=pytest.mark.slow),
+])
+def test_two_replica_async_dqn_on_catch_learns(launcher):
+    """Acceptance: learner_sync='async' trains DQN-on-Catch through the
+    UNCHANGED DQNBuilder on both backends — two free-running replica SGD
+    streams exchanging through the push/pull service clear the eval bar,
+    and extras['learners'] reports the async exchange stats."""
+    from repro.experiments import run_distributed_experiment
+
+    config = make_dqn_catch_config(
+        seed=0, eval_episodes=20, launcher=launcher,
+        num_learner_replicas=2, learner_average_period=10,
+        learner_sync="async")
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=4000,
+                                        timeout_s=240)
+    assert result.counts.get("actor_steps", 0) >= 4000
+    assert result.learner_steps > 50
+    learners = result.extras["learners"]
+    assert learners["num_replicas"] == 2
+    assert learners["sync"] == "async"
+    assert learners["rounds"] >= 1
+    assert learners["service"]["pushes"] >= 2
+    assert all(s > 0 for s in learners["per_replica_steps"])
+    # both shards fed their replica
+    per_shard = result.extras["replay"]["per_shard"]
+    assert len(per_shard) == 2
+    assert all(s["samples"] > 0 for s in per_shard)
+    # learning: greedy eval beats the random-policy floor on Catch
+    assert result.final_eval_return is not None
+    assert result.final_eval_return > CATCH_FLOOR

@@ -787,16 +787,114 @@ def test_param_server_quorum_full_round_merges_immediately():
     assert ps.stats()["quorum_merges"] == 0
 
 
-def test_param_server_late_replica_joins_next_round():
+def test_param_server_late_replica_adopts_instead_of_remerging():
+    """PR 10 regression (quorum double-merge fix): a straggler that missed
+    a merge must ADOPT the blend, not open a lone round with its stale
+    state — which previously REPLACED the merged params with pre-merge
+    ones."""
     from repro.learners import ParameterServer
 
     ps = ParameterServer(2, 1, barrier_timeout_s=0.1, min_quorum=1)
     assert ps.sync(0, _ps_state(1.0)) == {"w": np.float32(1.0)}
-    # the straggler arrives after its round merged without it: it opens
-    # round 2 and merges there (alone, after another timeout) instead of
-    # deadlocking
-    assert ps.sync(1, _ps_state(9.0)) == {"w": np.float32(9.0)}
+    # the straggler arrives after its round merged without it: its state
+    # predates the blend, so it adopts rather than contributes
+    assert ps.sync(1, _ps_state(9.0)) == {"w": np.float32(1.0)}
+    assert ps.rounds == 1
+    assert ps.stats()["stale_adoptions"] == 1
+    assert ps.merged == {"w": np.float32(1.0)}
+    # next period it contributes fresh work: round 2 times out and merges
+    # the straggler's NEW state (the only pending contribution)
+    assert ps.sync(1, _ps_state(5.0)) == {"w": np.float32(5.0)}
     assert ps.rounds == 2
+
+
+def test_param_server_quorum_round_merges_once_not_twice():
+    """PR 10 regression: exactly ``min_quorum`` contributions arriving just
+    under ``barrier_timeout_s`` merge ONCE — the straggler that shows up
+    after the deadline adopts, and the blend is untouched."""
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(3, 1, barrier_timeout_s=0.4, min_quorum=2)
+    results = {}
+
+    def contribute(rid, x):
+        results[rid] = ps.sync(rid, _ps_state(x))
+
+    t0 = threading.Thread(target=contribute, args=(0, 1.0))
+    t0.start()
+    time.sleep(0.3)                    # just under the 0.4s deadline
+    t1 = threading.Thread(target=contribute, args=(1, 3.0))
+    t1.start()
+    t0.join(JOIN_S)
+    t1.join(JOIN_S)
+    assert not t0.is_alive() and not t1.is_alive()
+    # ONE timed-out merge of the two arrivals — not one per waiter
+    assert results[0] == results[1] == {"w": np.float32(2.0)}
+    stats = ps.stats()
+    assert stats["rounds"] == 1
+    assert stats["quorum_merges"] == 1
+    # the replica that missed the round adopts the blend verbatim
+    assert ps.sync(2, _ps_state(9.0)) == {"w": np.float32(2.0)}
+    assert ps.rounds == 1
+    assert ps.stats()["stale_adoptions"] == 1
+
+
+def test_param_server_invalidate_withdraws_parked_contribution():
+    """PR 10 regression: a restored replica's stale ``replica_id`` cannot
+    double-contribute to one round.  ``invalidate`` releases its parked
+    sync with ``None`` (nothing adopted over the restored state) and drops
+    the stale value, so the round that eventually merges holds only fresh
+    contributions."""
+    from repro.learners import ParameterServer
+
+    ps = ParameterServer(2, 1, barrier_timeout_s=30.0, min_quorum=2)
+    out = {}
+
+    def parked():
+        out["r"] = ps.sync(0, _ps_state(666.0))   # pre-kill stale state
+
+    t = threading.Thread(target=parked)
+    t.start()
+    time.sleep(0.1)
+    ps.invalidate(0)                   # replica 0 dies; watchdog restores it
+    t.join(JOIN_S)
+    assert not t.is_alive()
+    assert out["r"] is None            # withdrawn, not adopted
+    assert ps.rounds == 0
+
+    # the restored replica re-contributes cleanly; the stale 666 is gone
+    results = {}
+
+    def contribute(rid, x):
+        results[rid] = ps.sync(rid, _ps_state(x))
+
+    t0 = threading.Thread(target=contribute, args=(0, 2.0))
+    t0.start()
+    contribute(1, 4.0)
+    t0.join(JOIN_S)
+    assert results[0] == results[1] == {"w": np.float32(3.0)}
+    assert ps.rounds == 1
+
+
+def test_worker_mark_down_invalidates_parked_contribution():
+    """``LearnerReplicaWorker.mark_down`` must withdraw the replica's
+    pending contribution at the server — a dead replica's stale state must
+    not be folded into a round it no longer stands behind."""
+    from repro.learners import LearnerReplicaWorker
+
+    class _Recorder:
+        def __init__(self):
+            self.invalidated = []
+
+        def invalidate(self, replica_id):
+            self.invalidated.append(replica_id)
+
+    recorder = _Recorder()
+    worker = LearnerReplicaWorker(learner=None, param_server=recorder,
+                                  replica_id=3)
+    worker.mark_down()
+    assert recorder.invalidated == [3]
+    worker.mark_up()
 
 
 def test_param_server_default_barrier_still_blocks():
@@ -995,6 +1093,90 @@ def test_service_watchdog_kill_restores_snapshot_at_same_address(tmp_path):
     assert stats["service_restarts"] == {"replay/shard_0": 1}
     assert stats["service_exit_kinds"]["replay/shard_0"] == [CRASH]
     assert launcher.errors == []
+
+
+def test_service_watchdog_restores_async_param_service_same_address(
+        tmp_path):
+    """PR 10: the ``learner/param_service`` node fails over like any other
+    service — the watchdog kills it (push/pull raise ``ServiceUnavailable``),
+    restores the snapshot's contributions, and re-binds at the SAME courier
+    address so the original pickled handle's pulls resume through
+    reconnect."""
+    from repro.distributed import ServiceUnavailable, courier
+    from repro.learners import (ASYNC_PARAM_SERVICE_INTERFACE,
+                                AsyncParameterService)
+    from repro.resilience.failover import ServiceWatchdog
+
+    service = AsyncParameterService(num_replicas=2, merge="mean")
+    server, handle = courier.serve(
+        service, interface=ASYNC_PARAM_SERVICE_INTERFACE + ("activity",),
+        name="learner/param_service")
+    launcher = _FakeLauncher({"learner/param_service": server})
+    wd = ServiceWatchdog(launcher, RestartPolicy(max_restarts=2,
+                                                 backoff_base_s=0.05),
+                         snapshot_period_s=0.05,
+                         snapshot_dir=str(tmp_path))
+    wd.register("learner/param_service", service)
+    wd.start()
+    try:
+        handle.push(0, _ps_state(2.0), 10)
+        handle.push(1, _ps_state(4.0), 10)
+        assert handle.pull() == {"w": np.float32(3.0)}
+        wd.snapshot_now()              # deterministic cut: both contributions
+        service.push(0, _ps_state(100.0), 11)   # post-snapshot -> rolled back
+        wd.kill("learner/param_service", exit_code=42)
+        with pytest.raises(ServiceUnavailable):
+            service.pull()             # in-parent data path is down too
+
+        assert _wait_for(lambda: launcher._servers["learner/param_service"]
+                         is not server, timeout=JOIN_S), \
+            f"service never respawned; errors={launcher.errors}"
+        respawned = launcher._servers["learner/param_service"]
+        assert respawned.address == server.address
+        # the ORIGINAL handle reconnects; the blend is the snapshot's
+        assert handle.pull() == {"w": np.float32(3.0)}
+        handle.push(1, _ps_state(6.0), 12)      # and writable again
+        assert handle.pull() == {"w": np.float32(4.0)}
+    finally:
+        wd.join(timeout=JOIN_S)
+        launcher._servers["learner/param_service"].stop()
+    stats = wd.stats()
+    assert stats["service_restarts"] == {"learner/param_service": 1}
+    assert launcher.errors == []
+
+
+@pytest.mark.slow
+def test_failover_acceptance_kill_async_param_service_still_learns():
+    """Acceptance (PR 10): chaos kills the ``learner/param_service`` node
+    mid-run under ``learner_sync="async"``.  The watchdog restores it from
+    its snapshot at the same address; replica pushes/pulls resume through
+    courier reconnect; no replica or worker dies of ``ServiceUnavailable``;
+    and the run still learns."""
+    from conftest import make_dqn_catch_config
+    from repro.experiments import run_distributed_experiment
+
+    config = make_dqn_catch_config(
+        seed=0, eval_episodes=20, launcher="multiprocess",
+        num_learner_replicas=2, learner_average_period=10,
+        learner_sync="async",
+        restart_policy=RestartPolicy(max_restarts=3),
+        chaos=ChaosPolicy(kill_after_steps=20,
+                          kill_targets=("learner/param_service",),
+                          max_kills=1))
+    result = run_distributed_experiment(config, num_actors=2,
+                                        max_actor_steps=4000, timeout_s=300)
+    assert result.counts.get("actor_steps", 0) >= 4000
+    resilience = result.extras["resilience"]
+    assert resilience["service_restarts"].get("learner/param_service") == 1, \
+        resilience
+    # no WORKER died: replicas degraded through the restart window
+    assert resilience["restarts"] == {}, resilience
+    learners = result.extras["learners"]
+    assert learners["sync"] == "async"
+    assert learners["rounds"] > 0            # exchanges resumed post-restore
+    assert all(s > 0 for s in learners["per_replica_steps"])
+    assert result.final_eval_return is not None
+    assert result.final_eval_return > -0.6
 
 
 def test_service_watchdog_budget_exhaustion_records_error(tmp_path):
